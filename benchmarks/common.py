@@ -1,0 +1,45 @@
+"""Shared benchmark utilities: timing + the paper's workload generator."""
+
+from __future__ import annotations
+
+import time
+from pathlib import Path
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.pipeline import BlockStore
+from repro.core.pipeline.records import segment_block_bytes
+
+
+def timeit(fn, *, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall seconds per call (after jit warmup)."""
+    for _ in range(warmup):
+        fn()
+    samples = []
+    for _ in range(iters):
+        t0 = time.monotonic()
+        fn()
+        samples.append(time.monotonic() - t0)
+    return float(np.median(samples))
+
+
+def make_signal_store(root: Path, *, size_mb: int, fft_len: int,
+                      segments_per_block: int = 1024, seed: int = 0,
+                      replication: int = 1) -> tuple[BlockStore, np.ndarray]:
+    """Interleaved-complex signal file split into blocks (paper's setup)."""
+    n_seg = size_mb * (1 << 20) // (8 * fft_len)
+    rng = np.random.default_rng(seed)
+    sig = rng.standard_normal((n_seg, fft_len, 2)).astype(np.float32)
+    store = BlockStore(root, block_bytes=segment_block_bytes(
+        fft_len, min(segments_per_block, n_seg)), replication=replication)
+    store.put_bytes(sig.tobytes())
+    return store, sig
+
+
+def block_until_ready(x):
+    if isinstance(x, tuple):
+        for e in x:
+            e.block_until_ready()
+    else:
+        x.block_until_ready()

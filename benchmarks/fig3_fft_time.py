@@ -1,0 +1,49 @@
+"""Paper Figure 3: FFT CALCULATION time only (I/O excluded).
+
+Paper: the GPU's batched CUFFT cut pure FFT time ~5x vs the CPU library.
+Container analogue: pure compute time of each kernel impl over an in-memory
+batch, per FFT length. Also reports the MXU-vs-VPU formulation comparison
+(matfft vs stockham) that motivates the TPU adaptation (DESIGN.md §2).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import timeit
+from repro.kernels.fft import ops as fft_ops
+
+BATCH_ELEMS = 1 << 21  # ~2M complex samples in memory
+
+
+def run(quick: bool = False):
+    sizes = [1024] if quick else [256, 1024, 4096]
+    elems = BATCH_ELEMS // (4 if quick else 1)
+    rows = []
+    rng = np.random.default_rng(0)
+    for n in sizes:
+        b = elems // n
+        xr = jnp.asarray(rng.standard_normal((b, n)), jnp.float32)
+        xi = jnp.asarray(rng.standard_normal((b, n)), jnp.float32)
+        times = {}
+        for impl in ("ref", "matfft", "stockham"):
+            def call(impl=impl):
+                yr, yi = fft_ops.fft_jit(xr, xi, impl=impl)
+                yr.block_until_ready()
+            t = timeit(call, warmup=1, iters=3)
+            times[impl] = t
+            rows.append({"name": f"fig3_fft_{impl}_n{n}",
+                         "us_per_call": t * 1e6,
+                         "derived": f"batch={b} "
+                                    f"gflops={5 * b * n * np.log2(n) / t / 1e9:.2f}"})
+        rows.append({"name": f"fig3_speedup_n{n}", "us_per_call": 0.0,
+                     "derived": f"accel_vs_lib={times['ref'] / times['matfft']:.2f}x "
+                                f"mxu_vs_vpu_formulation={times['stockham'] / times['matfft']:.2f}x "
+                                f"(paper: ~5x gpu vs cpu)"})
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,42 @@
+"""Paper Figures 4/5: percent of time in I/O vs FFT calculation.
+
+Paper: CPU pipeline ~70-75% I/O; GPU pipeline ~92-95% I/O (the faster the
+compute, the more I/O dominates — the Amdahl argument driving the whole
+design). Reproduced through the block pipeline with per-phase timers.
+"""
+
+from __future__ import annotations
+
+import tempfile
+from pathlib import Path
+
+from benchmarks.common import make_signal_store
+from benchmarks.fig2_total_time import run_pipeline
+from repro.core.amdahl import fit_parallel_fraction
+
+FFT_LEN = 1024
+
+
+def run(quick: bool = False):
+    size = 8 if quick else 24
+    rows = []
+    with tempfile.TemporaryDirectory() as tmp:
+        store, _ = make_signal_store(Path(tmp) / "in", size_mb=size,
+                                     fft_len=FFT_LEN)
+        for impl, fig, paper in (("ref", "fig4", "70-75%"),
+                                 ("matfft", "fig5", "92-95%")):
+            r = run_pipeline(store, Path(tmp) / f"out_{impl}", impl, FFT_LEN)
+            measured = r["io_s"] + r["fft_s"]
+            io_pct = 100 * r["io_s"] / measured
+            p = fit_parallel_fraction(r["io_s"], r["fft_s"])
+            rows.append({
+                "name": f"{fig}_io_fraction_{impl}",
+                "us_per_call": r["total_s"] * 1e6,
+                "derived": f"io={io_pct:.1f}% fft={100 - io_pct:.1f}% "
+                           f"amdahl_P={p:.3f} (paper: io {paper})"})
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,56 @@
+"""Paper Figure 6: single machine vs cluster computation time.
+
+Paper: one machine vs an 8-node EC2 GPU Hadoop cluster. Container
+analogue: the same block job over 1..N worker threads ("servers" — jit'd
+FFT work releases the GIL so threads genuinely overlap), overlaid with the
+paper's O(n log n / (0.8*S*C)) runtime model calibrated on the 1-worker
+measurement. The reproduced claim: near-linear scaling with S, modest
+efficiency loss (their 0.8 factor).
+"""
+
+from __future__ import annotations
+
+import tempfile
+from pathlib import Path
+
+from benchmarks.common import make_signal_store
+from benchmarks.fig2_total_time import run_pipeline
+from repro.core.amdahl import ClusterModel, calibrate_unit_time
+
+FFT_LEN = 1024
+
+
+def run(quick: bool = False):
+    size = 8 if quick else 24
+    workers = [1, 2] if quick else [1, 2, 4]
+    rows = []
+    with tempfile.TemporaryDirectory() as tmp:
+        store, _ = make_signal_store(Path(tmp) / "in", size_mb=size,
+                                     fft_len=FFT_LEN,
+                                     segments_per_block=256)
+        n = size * (1 << 20) // 8
+        results = {}
+        for w in workers:
+            r = run_pipeline(store, Path(tmp) / f"out_w{w}", "matfft",
+                             FFT_LEN, workers=w)
+            results[w] = r["total_s"]
+            rows.append({"name": f"fig6_workers_{w}",
+                         "us_per_call": r["total_s"] * 1e6,
+                         "derived": f"size={size}MB"})
+        unit = calibrate_unit_time(n, results[workers[0]], cores=1,
+                                   efficiency=1.0)
+        model = ClusterModel(unit_time_s=unit, efficiency=0.8)
+        for w in workers[1:]:
+            pred = model.predict(n, 1, w)
+            eff = results[workers[0]] / (w * results[w])
+            rows.append({
+                "name": f"fig6_model_w{w}", "us_per_call": pred * 1e6,
+                "derived": f"measured={results[w]:.2f}s "
+                           f"model={pred:.2f}s efficiency={eff:.2f} "
+                           f"(paper assumes 0.8)"})
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,111 @@
+"""Generate the EXPERIMENTS.md tables from results/dryrun/*.json.
+
+    PYTHONPATH=src python -m benchmarks.report [--mesh single_pod]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+from benchmarks.roofline import (CHIPS_SINGLE_POD, analyze_cell, load_cell,
+                                 model_flops_per_device)
+from repro.configs import ARCHS
+from repro.launch.specs import SHAPES
+
+RESULTS = Path(__file__).resolve().parent.parent / "results" / "dryrun"
+
+
+def dryrun_table(mesh: str) -> str:
+    lines = [
+        f"| arch | shape | status | temp GiB/dev | args GiB/dev | compile s |",
+        "|---|---|---|---|---|---|",
+    ]
+    for arch in ARCHS:
+        for shape in SHAPES:
+            rec = load_cell(arch, shape, mesh)
+            if rec is None:
+                lines.append(f"| {arch} | {shape} | MISSING | | | |")
+                continue
+            if rec.get("skipped"):
+                lines.append(f"| {arch} | {shape} | skip (long_500k rule) | | | |")
+                continue
+            if not rec.get("ok"):
+                lines.append(f"| {arch} | {shape} | **FAIL** {rec.get('error','')[:60]} | | | |")
+                continue
+            m = rec["memory"]
+            lines.append(
+                f"| {arch} | {shape} | ok | "
+                f"{m['temp_bytes'] / 2**30:.2f} | "
+                f"{m['argument_bytes'] / 2**30:.2f} | "
+                f"{rec.get('compile_s', '')} |")
+    return "\n".join(lines)
+
+
+def roofline_table() -> str:
+    lines = [
+        "| arch | shape | compute s | memory s [lb,ub] | collective s | bound | "
+        "MODEL/HLO flops | roofline frac | one-line fix |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    hints = {
+        ("collective",): "cut FSDP gathers / EP a2a / topology reshape",
+        ("memory",): "fuse, bf16 intermediates, smaller remat window",
+        ("compute",): "shard replicated attention heads / pad to axis",
+    }
+    for arch in ARCHS:
+        for shape in SHAPES:
+            rec = load_cell(arch, shape, "single_pod")
+            if rec is None or rec.get("skipped") or not rec.get("ok"):
+                continue
+            a = analyze_cell(rec)
+            if not a:
+                continue
+            fix = hints[(a["bottleneck"],)]
+            lines.append(
+                f"| {arch} | {shape} | {a['compute_s']:.4f} | "
+                f"{a['memory_s']:.4f} [{a['memory_s_lb']:.4f},"
+                f"{a['memory_s_ub']:.4f}] | {a['collective_s']:.4f} | "
+                f"{a['bottleneck']} | {a['useful_ratio']:.3f} | "
+                f"{a['roofline_frac']:.4f} | {fix} |")
+    return "\n".join(lines)
+
+
+def pick_hillclimb_cells() -> list[dict]:
+    """worst roofline frac / most collective-bound / paper-representative."""
+    cells = []
+    for arch in ARCHS:
+        for shape in SHAPES:
+            rec = load_cell(arch, shape, "single_pod")
+            if rec is None or rec.get("skipped") or not rec.get("ok"):
+                continue
+            a = analyze_cell(rec)
+            if a:
+                cells.append(a)
+    if not cells:
+        return []
+    worst = min(cells, key=lambda a: a["roofline_frac"])
+    coll = max(cells, key=lambda a: a["collective_s"]
+               / max(a["compute_s"] + a["memory_s"], 1e-12))
+    return [dict(worst, why="worst roofline fraction"),
+            dict(coll, why="most collective-bound")]
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    args = ap.parse_args(argv)
+    print("## Dry-run (single_pod, 16x16 = 256 chips)\n")
+    print(dryrun_table("single_pod"))
+    print("\n## Dry-run (multi_pod, 2x16x16 = 512 chips)\n")
+    print(dryrun_table("multi_pod"))
+    print("\n## Roofline (single_pod)\n")
+    print(roofline_table())
+    print("\n## Suggested hillclimb cells\n")
+    for c in pick_hillclimb_cells():
+        print(f"- {c['arch']} x {c['shape']}: {c['why']} "
+              f"(frac={c['roofline_frac']:.4f}, bound={c['bottleneck']})")
+
+
+if __name__ == "__main__":
+    main()

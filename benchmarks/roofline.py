@@ -1,0 +1,166 @@
+"""Roofline analysis from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch x shape) single-pod cell:
+
+    compute term    = HLO_FLOPs_per_device   / 197e12 FLOP/s   (bf16 MXU)
+    memory term     = HLO_bytes_per_device   / 819e9  B/s      (HBM)
+    collective term = coll_bytes_per_device  / 50e9   B/s      (ICI links)
+
+(cost_analysis and the HLO collective parse are per-device — calibrated in
+launch/dryrun.py — so the spec's global/(chips*peak) form reduces to these.)
+FLOPs/bytes come from the unrolled-depth-extrapolated cost pass because
+XLA's cost analysis ignores while-loop trip counts (models/scanning.py).
+
+MODEL_FLOPS uses the spec's convention: 6*N*D train / 2*N*D prefill /
+2*N*B decode, N = active params (MoE: routed top-k + shared expert), D =
+global tokens; divided by 256 chips to match the per-device HLO numbers.
+The ratio MODEL_FLOPS/HLO_FLOPs exposes remat recompute, attention flops,
+dispatch overhead, and — dominant for small-head archs — attention compute
+replicated over the model axis when head counts don't divide it.
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.configs import get_config
+from repro.launch.specs import SHAPES
+
+PEAK_FLOPS = 197e12   # bf16 per chip (v5e)
+HBM_BW = 819e9        # B/s per chip
+ICI_BW = 50e9         # B/s per link
+CHIPS_SINGLE_POD = 256
+
+RESULTS = Path(__file__).resolve().parent.parent / "results" / "dryrun"
+
+
+def model_flops_per_device(arch: str, shape: str, chips: int = CHIPS_SINGLE_POD):
+    cfg = get_config(arch)
+    case = SHAPES[shape]
+    n = cfg.n_active_params()
+    if case.mode == "train":
+        toks = case.global_batch * case.seq_len
+        total = 6.0 * n * toks
+    elif case.mode == "prefill":
+        toks = case.global_batch * case.seq_len
+        total = 2.0 * n * toks
+    else:  # decode: one token per sequence
+        total = 2.0 * n * case.global_batch
+    return total / chips
+
+
+def load_cell(arch: str, shape: str, mesh: str = "single_pod") -> dict | None:
+    p = RESULTS / f"{arch}__{shape}__{mesh}.json"
+    if not p.exists():
+        return None
+    return json.loads(p.read_text())
+
+
+def analyze_cell(rec: dict) -> dict | None:
+    """Three roofline terms + bottleneck + MFU-proxy for one dry-run record.
+
+    Metric hygiene (models/scanning.py): flops + collective bytes come from
+    the full-unroll extrapolation and are exact; the scanned pass (loop
+    bodies counted once) is a hard floor, so every extrapolated metric is
+    clamped to it — this also de-noises decode cells where tiny per-layer
+    deltas can go negative. Memory is reported as [lb, ub]: lb from the
+    layers-only unroll (inner-scan bodies once), ub from the full unroll
+    (fusion-subsumed slices overcount); the geometric mean is the point
+    estimate used for the bottleneck call.
+    """
+    if rec.get("skipped") or not rec.get("ok"):
+        return None
+    cost = rec.get("cost") or rec.get("cost_lb")
+    if cost is None:
+        return None
+    floor = rec.get("cost_scanned", {})
+
+    def met(key, source=cost):
+        return max(source.get(key, 0.0), floor.get(key, 0.0), 0.0)
+
+    flops = met("flops")
+    bytes_ub = met("bytes_accessed")
+    bytes_lb = (met("bytes_accessed", rec["cost_lb"])
+                if "cost_lb" in rec else bytes_ub)
+    bytes_lb = min(bytes_lb, bytes_ub)
+    bytes_mid = (bytes_lb * bytes_ub) ** 0.5 if bytes_lb else bytes_ub
+    coll = met("collective_bytes")
+
+    t_compute = flops / PEAK_FLOPS
+    t_mem_lb, t_mem_ub = bytes_lb / HBM_BW, bytes_ub / HBM_BW
+    t_memory = bytes_mid / HBM_BW
+    t_collective = coll / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory,
+             "collective": t_collective}
+    bottleneck = max(terms, key=terms.get)
+    mf = model_flops_per_device(rec["arch"], rec["shape"])
+    t_bound = max(terms.values())
+    return {
+        "arch": rec["arch"], "shape": rec["shape"],
+        "compute_s": t_compute, "memory_s": t_memory,
+        "memory_s_lb": t_mem_lb, "memory_s_ub": t_mem_ub,
+        "collective_s": t_collective,
+        "bottleneck": bottleneck,
+        "model_flops": mf,
+        "hlo_flops": flops,
+        "useful_ratio": mf / flops if flops else 0.0,
+        # roofline fraction: useful-model-time / bound-time
+        "roofline_frac": (mf / PEAK_FLOPS) / t_bound if t_bound else 0.0,
+        "temp_gib": rec["memory"]["temp_bytes"] / 2**30,
+    }
+
+
+def table(mesh: str = "single_pod"):
+    rows = []
+    for arch in [a.strip() for a in _ARCHS]:
+        for shape in SHAPES:
+            rec = load_cell(arch, shape, mesh)
+            if rec is None:
+                continue
+            if rec.get("skipped"):
+                rows.append({"arch": arch, "shape": shape, "skipped": True,
+                             "reason": rec.get("reason", "")})
+                continue
+            a = analyze_cell(rec)
+            if a:
+                rows.append(a)
+            else:
+                rows.append({"arch": arch, "shape": shape,
+                             "failed": rec.get("error", "no cost pass")})
+    return rows
+
+
+from repro.configs import ARCHS as _ARCHS  # noqa: E402
+
+
+def run(quick: bool = False):
+    out = []
+    for r in table():
+        if r.get("skipped"):
+            out.append({"name": f"roofline_{r['arch']}_{r['shape']}",
+                        "us_per_call": 0.0, "derived": "SKIP (long_500k rule)"})
+            continue
+        if r.get("failed"):
+            out.append({"name": f"roofline_{r['arch']}_{r['shape']}",
+                        "us_per_call": 0.0, "derived": f"FAIL {r['failed']}"})
+            continue
+        out.append({
+            "name": f"roofline_{r['arch']}_{r['shape']}",
+            "us_per_call": max(r["compute_s"], r["memory_s"],
+                               r["collective_s"]) * 1e6,
+            "derived": (f"bound={r['bottleneck']} "
+                        f"frac={r['roofline_frac']:.3f} "
+                        f"useful={r['useful_ratio']:.3f} "
+                        f"c/m/x={r['compute_s']:.4f}/{r['memory_s']:.4f}/"
+                        f"{r['collective_s']:.4f}s"),
+        })
+    if not out:
+        out.append({"name": "roofline", "us_per_call": 0.0,
+                    "derived": "no dry-run results yet (run repro.launch.sweep)"})
+    return out
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

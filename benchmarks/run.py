@@ -1,0 +1,50 @@
+"""Benchmark harness: one module per paper figure + the roofline table.
+
+Prints ``name,us_per_call,derived`` CSV. ``--quick`` shrinks sizes;
+``--only fig3`` runs one module. Figures 2-6 measure the real pipeline on
+this host (scaled from the paper's 16GB to laptop sizes); the roofline rows
+read the dry-run artifacts in results/dryrun/.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+from benchmarks import (fig2_total_time, fig3_fft_time, fig45_io_fraction,
+                        fig6_scaling, roofline)
+
+MODULES = {
+    "fig2": fig2_total_time,
+    "fig3": fig3_fft_time,
+    "fig45": fig45_io_fraction,
+    "fig6": fig6_scaling,
+    "roofline": roofline,
+}
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", choices=list(MODULES), default=None)
+    args = ap.parse_args(argv)
+
+    names = [args.only] if args.only else list(MODULES)
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in names:
+        try:
+            for row in MODULES[name].run(quick=args.quick):
+                print(f"{row['name']},{row['us_per_call']:.1f},"
+                      f"\"{row['derived']}\"", flush=True)
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+            print(f"{name},nan,\"FAILED\"", flush=True)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

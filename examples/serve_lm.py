@@ -1,0 +1,56 @@
+"""Batched serving example: prefill + greedy decode with KV caches.
+
+    PYTHONPATH=src python examples/serve_lm.py [--arch gemma3-1b]
+
+Uses the reduced config of any assigned architecture — including the
+SWA ring-cache (gemma3/danube/mixtral), SSM-state (rwkv6/zamba2) and
+enc-dec (whisper) cache layouts.
+"""
+
+import argparse
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, get_config
+from repro.models.transformer import TransformerLM
+from repro.serve import ServeEngine
+from repro.sharding.rules import init_params
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b", choices=ARCHS)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=48)
+    ap.add_argument("--new-tokens", type=int, default=24)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced()
+    model = TransformerLM(cfg)
+    params = init_params(model.param_specs(), jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+
+    batch = {"tokens": jnp.asarray(
+        rng.integers(1, cfg.vocab_size, (args.batch, args.prompt_len)))}
+    if cfg.encoder_layers:
+        batch["frames"] = jnp.asarray(
+            rng.standard_normal((args.batch, 64, cfg.d_model)), jnp.float32)
+    if cfg.num_prefix_embeds:
+        batch["patches"] = jnp.asarray(
+            rng.standard_normal((args.batch, cfg.num_prefix_embeds,
+                                 cfg.d_model)), jnp.float32)
+
+    engine = ServeEngine(model)
+    t0 = time.monotonic()
+    out = engine.generate(params, batch, args.new_tokens)
+    dt = time.monotonic() - t0
+    print(f"arch={args.arch} generated {tuple(out.shape)} in {dt:.1f}s "
+          f"({args.batch * args.new_tokens / dt:.1f} tok/s incl. compile)")
+    print("first sequences:", np.asarray(out)[:2, :10])
+
+
+if __name__ == "__main__":
+    main()

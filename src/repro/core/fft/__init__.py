@@ -1,0 +1,4 @@
+from repro.core.fft.distributed import distributed_fft, plan_distributed
+from repro.core.fft.segmented import segmented_fft
+
+__all__ = ["distributed_fft", "plan_distributed", "segmented_fft"]

@@ -1,0 +1,163 @@
+"""Cross-device (level 2) four-step FFT via shard_map + all_to_all.
+
+This implements the paper's §VI future work ("paralleling an FFT across a
+server cluster ... using RDMA") TPU-natively: the Hadoop cluster becomes a
+mesh axis (or a flattened tuple of axes, up to the full 512-chip multi-pod
+mesh), HDFS block exchange becomes `jax.lax.all_to_all` over ICI, and each
+"map task" runs the level-0/1 MXU kernels of kernels/fft/ops.py on its
+local shard.
+
+Data layout (N = N1 * N2 global points, D devices, planar re/im):
+
+  input   x[i], i = i1*N2 + i2, sharded contiguously: device d owns
+          i in [d*N/D, (d+1)*N/D)  == rows i1 in [d*N1/D, ...) of (N1, N2)
+  a2a #1  split i2, concat i1   -> (N1, N2/D)   full columns on-device
+  pass 1  local FFT over i1 (length N1, batched N2/D)  + on-the-fly twiddle
+  a2a #2  split o1, concat i2   -> (N2, N1/D)   full rows on-device
+  pass 2  local FFT over i2 (length N2, batched N1/D)
+  a2a #3  (natural_order only) split o2, concat o1 -> contiguous output shard
+
+Constraints: N, N1, N2 powers of two with D | N1 and D | N2 (hence N >= D^2)
+— the standard constraint of transpose-based distributed FFTs. With the
+512-chip mesh the minimum distributed transform is 2^18 points.
+
+Twiddle note: W_N^{i2*o1} exponents reach N1*N2 ~ 2^40+, far beyond f32
+integer precision. Since N is a power of two, `(i2 * o1) mod N` is computed
+exactly in uint32 wrap-around arithmetic (mod 2^32 then mask), keeping the
+twiddle angles exact for any N <= 2^32.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.kernels.fft import ops as fft_ops
+from repro.kernels.fft import plan as fft_plan
+
+
+@dataclass(frozen=True)
+class DistPlan:
+    n: int
+    d: int           # number of devices along the FFT axes
+    n1: int          # pass-1 transform length (columns)
+    n2: int          # pass-2 transform length (rows)
+
+    @property
+    def collective_bytes_per_device(self) -> int:
+        """Planar f32 payload each device exchanges per all_to_all."""
+        return 2 * 4 * self.n // self.d
+
+
+def plan_distributed(n: int, num_devices: int) -> DistPlan:
+    p = fft_plan.log2i(n)
+    pd = fft_plan.log2i(num_devices)
+    if p < 2 * pd:
+        raise ValueError(
+            f"distributed FFT needs n >= D^2 (n=2^{p}, D=2^{pd}); "
+            f"use segmented_fft for batches of smaller transforms")
+    a = min(max(p // 2, pd), p - pd)  # log2(n1), clamped so D | n1 and D | n2
+    return DistPlan(n=n, d=num_devices, n1=1 << a, n2=1 << (p - a))
+
+
+def _axis_size(mesh: Mesh, axis_names) -> int:
+    if isinstance(axis_names, str):
+        axis_names = (axis_names,)
+    return math.prod(mesh.shape[a] for a in axis_names)
+
+
+def _twiddle(i2g: jnp.ndarray, o1: jnp.ndarray, n: int):
+    """Planar W_n^{i2g*o1} with exact pow2 modular exponent (see header)."""
+    m = (i2g.astype(jnp.uint32)[:, None] * o1.astype(jnp.uint32)[None, :])
+    m = m & jnp.uint32(n - 1)
+    ang = (-2.0 * math.pi / n) * m.astype(jnp.float32)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def distributed_fft(xr: jnp.ndarray, xi: jnp.ndarray, mesh: Mesh,
+                    axis_names=("data", "model"), *, impl: str = "matfft",
+                    natural_order: bool = True, fuse_twiddle: bool = False,
+                    interpret: bool | None = None):
+    """Forward FFT of a single length-n planar signal sharded over ``mesh``.
+
+    Args:
+      xr, xi: (n,) float32 planes (global arrays; pjit/shard_map shards them
+        along the flattened ``axis_names``).
+      natural_order: if False, skip all_to_all #3 and return the transform
+        in transposed (o1-major) block order — FFTW's TRANSPOSED_OUT, useful
+        when a subsequent pointwise op + inverse FFT follows (convolution).
+    Returns planar (n,) arrays, sharded like the input.
+    """
+    if isinstance(axis_names, str):
+        axis_names = (axis_names,)
+    n = xr.shape[-1]
+    d = _axis_size(mesh, axis_names)
+    plan = plan_distributed(n, d)
+    n1, n2 = plan.n1, plan.n2
+    n1l, n2l = n1 // d, n2 // d
+    ax = tuple(axis_names)
+
+    def local(xr_loc, xi_loc):
+        # Device-local shard: contiguous rows of the (n1, n2) matrix.
+        didx = lax.axis_index(ax)
+
+        def a2a(a):  # global transpose: split cols, concat rows
+            return lax.all_to_all(a, ax, split_axis=1, concat_axis=0,
+                                  tiled=True)
+
+        # ---- a2a #1: (n1l, n2) -> (n1, n2l): full columns arrive ----
+        ar = a2a(xr_loc.reshape(n1l, n2))
+        ai = a2a(xi_loc.reshape(n1l, n2))
+
+        # ---- pass 1: FFT columns (length n1), batched over n2l ----
+        can_fuse = (fuse_twiddle and impl == "matfft"
+                    and fft_plan.make_plan(n1).levels == 1)
+        if can_fuse:
+            # twiddle W_n^{i2_global*o1} fused into the kernel epilogue:
+            # rows of this batch are i2-local, so the kernel's global row
+            # offset is didx*n2l; the table is never materialized in HBM
+            row_off = (didx * n2l).astype(jnp.int32).reshape(1)
+            br, bi = fft_ops.fft(ar.T, ai.T, impl=impl, interpret=interpret,
+                                 global_twiddle=(n, row_off))
+        else:
+            ar, ai = fft_ops.fft(ar.T, ai.T, impl=impl, interpret=interpret)
+            # ar: (n2l, n1), rows = local i2, cols = o1
+            # ---- twiddle W_n^{i2_global * o1}, computed on the fly ----
+            i2g = didx * n2l + jnp.arange(n2l, dtype=jnp.uint32)
+            tw_r, tw_i = _twiddle(i2g, jnp.arange(n1, dtype=jnp.uint32), n)
+            br = ar * tw_r - ai * tw_i
+            bi = ar * tw_i + ai * tw_r
+
+        # ---- a2a #2: (n2l, n1) -> (n2, n1l): full rows arrive ----
+        br, bi = a2a(br), a2a(bi)
+
+        # ---- pass 2: FFT rows (length n2), batched over n1l ----
+        cr, ci = fft_ops.fft(br.T, bi.T, impl=impl, interpret=interpret)
+        # cr: (n1l, n2), rows = local o1, cols = o2
+
+        if not natural_order:
+            return cr.reshape(-1), ci.reshape(-1)
+
+        # ---- a2a #3: (n1l, n2) -> (n1, n2l), then o2-major flatten ----
+        cr, ci = a2a(cr), a2a(ci)
+        # (n1, n2l)[o1, o2_loc] -> out[o2*n1 + o1]: transpose then flatten.
+        return cr.T.reshape(-1), ci.T.reshape(-1)
+
+    spec = P(ax)
+    # check_vma=False: pallas_call out_shapes do not carry vma metadata.
+    fn = jax.shard_map(local, mesh=mesh, in_specs=(spec, spec),
+                       out_specs=(spec, spec), check_vma=False)
+    return fn(xr, xi)
+
+
+def distributed_ifft(xr, xi, mesh, axis_names=("data", "model"), **kw):
+    """Inverse via conjugation identity, sharded like distributed_fft."""
+    n = xr.shape[-1]
+    yr, yi = distributed_fft(xr, -xi, mesh, axis_names, **kw)
+    return yr / n, -yi / n

@@ -1,0 +1,6 @@
+from repro.core.pipeline.blockstore import BlockStore
+from repro.core.pipeline.maponly import MapOnlyJob, JobConfig
+from repro.core.pipeline.records import segments_of_block, block_of_segments
+
+__all__ = ["BlockStore", "MapOnlyJob", "JobConfig", "segments_of_block",
+           "block_of_segments"]

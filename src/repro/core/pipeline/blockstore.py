@@ -1,0 +1,156 @@
+"""BlockStore: the HDFS analogue for the paper's block-granular pipeline.
+
+A *store* is a directory of fixed-size binary blocks plus a JSON manifest.
+The design choices mirror the paper directly:
+
+  * fixed ``block_bytes`` (their ``dfs.block.size``; default here is scaled
+    down from their 512 MB so tests stay fast, but it is the same knob —
+    the paper sets it to the largest buffer the accelerator can take in one
+    transfer);
+  * one block == one record == one map task (their custom InputFormat);
+  * blocks are named by byte offset so a final merge is a simple
+    offset-ordered concatenation (their ``hdfs -getmerge``);
+  * block writes are atomic (write-tmp, fsync, rename), which makes map
+    attempts idempotent — the property Hadoop's speculative execution
+    relies on, and ours does too (maponly.py);
+  * optional replication: ``replication=r`` keeps r copies of each block;
+    reads fall back to a replica when the primary is missing/corrupt
+    (checksum mismatch), simulating HDFS datanode failure.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import tempfile
+from dataclasses import dataclass, field
+from pathlib import Path
+
+import numpy as np
+
+MANIFEST = "manifest.json"
+
+
+def _sha(data: bytes) -> str:
+    return hashlib.sha256(data).hexdigest()[:16]
+
+
+def _atomic_write(path: Path, data: bytes) -> None:
+    tmp_fd, tmp_name = tempfile.mkstemp(dir=path.parent, prefix=".tmp_")
+    try:
+        with os.fdopen(tmp_fd, "wb") as f:
+            f.write(data)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp_name, path)  # atomic; last writer wins, all identical
+    except BaseException:
+        if os.path.exists(tmp_name):
+            os.unlink(tmp_name)
+        raise
+
+
+@dataclass
+class BlockInfo:
+    index: int
+    offset: int
+    nbytes: int
+    checksum: str
+
+    def name(self, replica: int = 0) -> str:
+        suffix = "" if replica == 0 else f".rep{replica}"
+        return f"block_{self.offset:016d}.bin{suffix}"
+
+
+@dataclass
+class BlockStore:
+    root: Path
+    block_bytes: int = 1 << 20
+    replication: int = 1
+    blocks: list[BlockInfo] = field(default_factory=list)
+    total_bytes: int = 0
+
+    def __post_init__(self):
+        self.root = Path(self.root)
+        self.root.mkdir(parents=True, exist_ok=True)
+
+    # ---------------- ingest ----------------
+    def put_bytes(self, data: bytes) -> None:
+        """Split ``data`` into blocks (the HDFS copy-in step)."""
+        self.blocks = []
+        self.total_bytes = len(data)
+        for off in range(0, len(data), self.block_bytes):
+            chunk = data[off:off + self.block_bytes]
+            info = BlockInfo(index=len(self.blocks), offset=off,
+                             nbytes=len(chunk), checksum=_sha(chunk))
+            for r in range(self.replication):
+                _atomic_write(self.root / info.name(r), chunk)
+            self.blocks.append(info)
+        self._save_manifest()
+
+    def put_array(self, arr: np.ndarray) -> None:
+        self.put_bytes(np.ascontiguousarray(arr).tobytes())
+
+    def _save_manifest(self) -> None:
+        doc = {
+            "block_bytes": self.block_bytes,
+            "total_bytes": self.total_bytes,
+            "replication": self.replication,
+            "blocks": [vars(b) for b in self.blocks],
+        }
+        _atomic_write(self.root / MANIFEST, json.dumps(doc, indent=1).encode())
+
+    @classmethod
+    def open(cls, root: os.PathLike) -> "BlockStore":
+        root = Path(root)
+        doc = json.loads((root / MANIFEST).read_text())
+        store = cls(root=root, block_bytes=doc["block_bytes"],
+                    replication=doc.get("replication", 1))
+        store.total_bytes = doc["total_bytes"]
+        store.blocks = [BlockInfo(**b) for b in doc["blocks"]]
+        return store
+
+    # ---------------- reads (with replica fallback) ----------------
+    def read_block(self, index: int, verify: bool = True) -> bytes:
+        info = self.blocks[index]
+        last_err: Exception | None = None
+        for r in range(max(self.replication, 1)):
+            path = self.root / info.name(r)
+            try:
+                data = path.read_bytes()
+                if verify and _sha(data) != info.checksum:
+                    raise IOError(f"checksum mismatch on {path.name}")
+                return data
+            except (IOError, OSError) as e:  # missing or corrupt replica
+                last_err = e
+        raise IOError(f"block {index}: all replicas failed") from last_err
+
+    def corrupt_block(self, index: int, replica: int = 0) -> None:
+        """Test hook: damage one replica (simulated datanode failure)."""
+        path = self.root / self.blocks[index].name(replica)
+        path.write_bytes(b"\x00CORRUPT" * 4)
+
+    # ---------------- output side ----------------
+    def write_output_block(self, out_dir: os.PathLike, index: int,
+                           data: bytes) -> None:
+        """Map-task output write: atomic, named by offset (mergeable)."""
+        out = Path(out_dir)
+        out.mkdir(parents=True, exist_ok=True)
+        _atomic_write(out / self.blocks[index].name(), data)
+
+    def getmerge(self, out_dir: os.PathLike, dest: os.PathLike) -> int:
+        """The paper's ``hdfs -getmerge``: offset-ordered concat to one file."""
+        out = Path(out_dir)
+        names = sorted(p.name for p in out.glob("block_*.bin"))
+        expect = [b.name() for b in self.blocks]
+        if names != expect:
+            missing = sorted(set(expect) - set(names))
+            raise IOError(f"getmerge: missing {len(missing)} output blocks: "
+                          f"{missing[:3]}...")
+        total = 0
+        with open(dest, "wb") as f:
+            for name in names:  # lexicographic == offset order (zero-padded)
+                data = (out / name).read_bytes()
+                f.write(data)
+                total += len(data)
+        return total

@@ -1,0 +1,92 @@
+"""Spectral ops built on the FFT stack: STFT, FFT convolution, SpectralMixer.
+
+These are the framework-level consumers of the paper's technique:
+  * ``stft`` — the signal-analyst workload the paper targets (spectrograms
+    over huge capture files), and the real math behind whisper's log-mel
+    frontend (which the assigned config stubs at the embedding level);
+  * ``fft_conv`` — long causal convolution via FFT (only valid for
+    time-INVARIANT kernels; RWKV6/Mamba2 decays are data-dependent, hence
+    inapplicable there — DESIGN.md §5);
+  * ``SpectralMixer`` — FNet-style token mixing, the optional beyond-paper
+    integration of the FFT into transformer blocks (ablation in examples/).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.fft import ops as fft_ops
+
+
+@functools.lru_cache(maxsize=None)
+def _hann(frame: int) -> np.ndarray:
+    return (0.5 - 0.5 * np.cos(2 * math.pi * np.arange(frame) / frame)).astype(np.float32)
+
+
+def frame_signal(x: jnp.ndarray, frame: int, hop: int) -> jnp.ndarray:
+    """(..., t) -> (..., n_frames, frame) by strided framing (drop tail)."""
+    t = x.shape[-1]
+    n_frames = 1 + (t - frame) // hop
+    idx = jnp.arange(n_frames)[:, None] * hop + jnp.arange(frame)[None, :]
+    return x[..., idx]
+
+
+def stft(x: jnp.ndarray, frame: int = 1024, hop: int = 512, *,
+         window: bool = True, impl: str = "matfft",
+         interpret: bool | None = None):
+    """Short-time Fourier transform -> planar (..., n_frames, frame//2+1)."""
+    frames = frame_signal(x.astype(jnp.float32), frame, hop)
+    if window:
+        frames = frames * jnp.asarray(_hann(frame))
+    yr, yi = fft_ops.fft(frames, jnp.zeros_like(frames), impl=impl,
+                         interpret=interpret)
+    k = frame // 2 + 1
+    return yr[..., :k], yi[..., :k]
+
+
+def power_spectrogram(x, frame=1024, hop=512, **kw):
+    sr, si = stft(x, frame, hop, **kw)
+    return sr * sr + si * si
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << max(1, (n - 1).bit_length())
+
+
+def fft_conv(x: jnp.ndarray, kernel: jnp.ndarray, *, impl: str = "matfft",
+             interpret: bool | None = None) -> jnp.ndarray:
+    """Causal 1-D convolution of (..., t) with (t_k,) via FFT, O(t log t).
+
+    Zero-padded to the next power of two >= t + t_k so the circular
+    convolution equals the linear one on the first t samples.
+    """
+    t = x.shape[-1]
+    tk = kernel.shape[-1]
+    n = _next_pow2(t + tk)
+    xp = jnp.pad(x.astype(jnp.float32), [(0, 0)] * (x.ndim - 1) + [(0, n - t)])
+    kp = jnp.pad(kernel.astype(jnp.float32), (0, n - tk))
+    z = jnp.zeros_like(xp)
+    xr, xi = fft_ops.fft(xp, z, impl=impl, interpret=interpret)
+    kr, ki = fft_ops.fft(kp, jnp.zeros_like(kp), impl=impl, interpret=interpret)
+    pr = xr * kr - xi * ki
+    pi = xr * ki + xi * kr
+    yr, _ = fft_ops.ifft(pr, pi, impl=impl, interpret=interpret)
+    return yr[..., :t]
+
+
+def spectral_mixer(x: jnp.ndarray, *, impl: str = "matfft",
+                   interpret: bool | None = None) -> jnp.ndarray:
+    """FNet token mixing: Re(FFT_seq(FFT_hidden(x))) for (..., seq, d).
+
+    Requires seq and d to be powers of two in kernel mode; callers pad.
+    """
+    z = jnp.zeros_like(x)
+    hr, hi = fft_ops.fft(x, z, impl=impl, interpret=interpret)  # over d
+    hr = jnp.swapaxes(hr, -1, -2)
+    hi = jnp.swapaxes(hi, -1, -2)
+    sr, _ = fft_ops.fft(hr, hi, impl=impl, interpret=interpret)  # over seq
+    return jnp.swapaxes(sr, -1, -2)

@@ -1,0 +1,231 @@
+"""MXU matmul-DFT Pallas kernel (the primary FFT kernel).
+
+Hardware adaptation (see DESIGN.md §2): CUFFT runs Cooley-Tukey butterflies
+on scalar CUDA cores; a TPU's throughput lives in the MXU systolic array,
+which only speaks GEMM. So the per-tile DFT is expressed as the Bailey
+four-step *inside VMEM*:
+
+    (bt, n) tile --reshape--> (bt, n1, n2)
+      GEMM with W_{n1}  ->  inner twiddle  ->  GEMM with W_{n2}  ->  reorder
+
+i.e. 8 real (planar complex) 2-D GEMMs per tile, all operands resident in
+VMEM. For n <= DIRECT_N the full (n, n) DFT matrix is used instead (one
+complex GEMM, perfectly MXU-aligned at n = 128/256).
+
+The optional *epilogue* input fuses the four-step's outer twiddle multiply
+into the kernel's final store, which is what removes one full HBM round-trip
+when this kernel is used as the leaf of a host-level (or distributed-level)
+four-step — the TPU analogue of the paper's "one allocate+memcpy pair per
+block" PCIe-minimization rule. The epilogue operand is a (rows_period, n)
+table indexed *periodically* by the grid, so it costs O(table) HBM traffic,
+not O(batch * n).
+
+Issued MAC count per batch row: 4*n*(n1+n2) real MACs vs the algorithmic
+5*n*log2(n) flops — the GEMM formulation trades ~2-5x more MACs for MXU
+residency (197 TFLOP/s vs ~4 TFLOP/s VPU on v5e), a >10x net win. This
+trade is recorded in the roofline's MODEL_FLOPS/HLO_FLOPs ratio.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.fft import plan as fft_plan
+
+# Transform lengths up to this use one full DFT-matrix GEMM.
+DIRECT_N = 256
+# Target elements per (bt, n) tile: keeps planar f32 in/out + intermediates
+# + tables well under half of v5e's ~16MB/core VMEM (double buffering).
+_TILE_ELEMS = 1 << 18
+
+
+def default_batch_tile(n: int) -> int:
+    return max(8, min(512, _TILE_ELEMS // max(n, 1)))
+
+
+def _cmul(ar, ai, br, bi):
+    return ar * br - ai * bi, ar * bi + ai * br
+
+
+def _cgemm(ar, ai, br, bi):
+    """Planar complex GEMM with f32 accumulation (4 real MXU GEMMs)."""
+    dot = functools.partial(jnp.dot, preferred_element_type=jnp.float32)
+    return dot(ar, br) - dot(ai, bi), dot(ar, bi) + dot(ai, br)
+
+
+def _global_twiddle(off_ref, bt, n, n_global):
+    """On-the-fly W_{n_global}^{(global_row) * col} for one (bt, n) tile,
+    global_row = off_ref[0] + program_id(0)*bt + r.
+
+    Exponent reduced exactly via uint32 wraparound (n_global is pow2, see
+    core/fft/distributed.py) — zero HBM traffic: the table is never
+    materialized; the VPU computes iota*iota, mask, cos/sin in registers.
+    This is the distributed four-step's twiddle fused into the leaf kernel
+    epilogue (the cross-device analogue of the level-1 table epilogue).
+    """
+    base = off_ref[0].astype(jnp.uint32) + jnp.uint32(pl.program_id(0) * bt)
+    row = base + jax.lax.broadcasted_iota(jnp.uint32, (bt, n), 0)
+    col = jax.lax.broadcasted_iota(jnp.uint32, (bt, n), 1)
+    m = (row * col) & jnp.uint32(n_global - 1)
+    ang = (-2.0 * 3.14159265358979323846 / n_global) * m.astype(jnp.float32)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def _dft_kernel(xr_ref, xi_ref, wr_ref, wi_ref, er_ref, ei_ref,
+                outr_ref, outi_ref, *, fuse_epilogue: bool,
+                global_n: int = 0):
+    """Direct DFT: one complex GEMM with the full (n, n) DFT matrix."""
+    yr, yi = _cgemm(xr_ref[...], xi_ref[...], wr_ref[...], wi_ref[...])
+    if global_n:
+        bt, n = yr.shape
+        tr, ti = _global_twiddle(er_ref, bt, n, global_n)
+        yr, yi = _cmul(yr, yi, tr, ti)
+    elif fuse_epilogue:
+        yr, yi = _cmul(yr, yi, er_ref[...], ei_ref[...])
+    outr_ref[...] = yr
+    outi_ref[...] = yi
+
+
+def _matfft_kernel(xr_ref, xi_ref, w1r_ref, w1i_ref, tr_ref, ti_ref,
+                   w2r_ref, w2i_ref, er_ref, ei_ref, outr_ref, outi_ref,
+                   *, n1: int, n2: int, fuse_epilogue: bool,
+                   global_n: int = 0):
+    """In-VMEM four-step DFT of the (bt, n1*n2) tile."""
+    bt = xr_ref.shape[0]
+    n = n1 * n2
+
+    # x[b, i1, i2] -> (bt*n2, n1) rows=(b,i2): contract i1 on the MXU.
+    def col_major(ref):
+        return ref[...].reshape(bt, n1, n2).swapaxes(1, 2).reshape(bt * n2, n1)
+
+    ar, ai = _cgemm(col_major(xr_ref), col_major(xi_ref),
+                    w1r_ref[...], w1i_ref[...])  # (bt*n2, n1), cols = o1
+
+    # Inner twiddle T^T[i2, o1], broadcast over b.
+    tr = tr_ref[...].reshape(1, n2, n1)
+    ti = ti_ref[...].reshape(1, n2, n1)
+    ar = ar.reshape(bt, n2, n1)
+    ai = ai.reshape(bt, n2, n1)
+    br_, bi_ = _cmul(ar, ai, tr, ti)
+
+    # (bt*n1, n2) rows=(b,o1): contract i2 on the MXU.
+    br_ = br_.swapaxes(1, 2).reshape(bt * n1, n2)
+    bi_ = bi_.swapaxes(1, 2).reshape(bt * n1, n2)
+    cr, ci = _cgemm(br_, bi_, w2r_ref[...], w2i_ref[...])  # cols = o2
+
+    # X[b, o2*n1 + o1] = C[b, o1, o2] -> swap to (b, o2, o1) and flatten.
+    yr = cr.reshape(bt, n1, n2).swapaxes(1, 2).reshape(bt, n)
+    yi = ci.reshape(bt, n1, n2).swapaxes(1, 2).reshape(bt, n)
+    if global_n:
+        tr_, ti_ = _global_twiddle(er_ref, bt, n, global_n)
+        yr, yi = _cmul(yr, yi, tr_, ti_)
+    elif fuse_epilogue:
+        yr, yi = _cmul(yr, yi, er_ref[...], ei_ref[...])
+    outr_ref[...] = yr
+    outi_ref[...] = yi
+
+
+def matfft(xr: jnp.ndarray, xi: jnp.ndarray, *,
+           epilogue: tuple[jnp.ndarray, jnp.ndarray] | None = None,
+           global_twiddle: tuple[int, jnp.ndarray] | None = None,
+           batch_tile: int | None = None,
+           interpret: bool = True) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Batched forward DFT along the last axis of planar (rows, n) arrays.
+
+    Args:
+      xr, xi: float32 (rows, n) planes; n a power of two <= plan.MAX_LEAF.
+      epilogue: optional planar (period, n) twiddle table; row r of the
+        output is multiplied by ``epilogue[r % period]``. ``period`` must be
+        a multiple of the batch tile (both are powers of two — the tile is
+        clamped to the period, so any pow2 period works).
+      batch_tile: rows per kernel instance (defaults to a VMEM-sized tile).
+      interpret: run in interpret mode (CPU container); False on real TPU.
+    """
+    if xr.ndim != 2:
+        raise ValueError(f"matfft expects 2-D (rows, n), got {xr.shape}")
+    rows, n = xr.shape
+    p = fft_plan.make_plan(n)
+    if p.levels != 1:
+        raise ValueError(f"n={n} exceeds single-kernel capacity; use ops.fft")
+
+    bt = batch_tile or default_batch_tile(n)
+    g_n = 0
+    if global_twiddle is not None:
+        assert epilogue is None
+        g_n, row_off = global_twiddle
+    fuse = epilogue is not None
+    if fuse:
+        period = epilogue[0].shape[0]
+        if period & (period - 1):
+            raise ValueError("epilogue period must be a power of two")
+        bt = min(bt, period)
+
+    pad = (-rows) % bt
+    if pad:
+        xr = jnp.pad(xr, ((0, pad), (0, 0)))
+        xi = jnp.pad(xi, ((0, pad), (0, 0)))
+    grid = (xr.shape[0] // bt,)
+
+    row_spec = pl.BlockSpec((bt, n), lambda i: (i, 0))
+    out_shape = [jax.ShapeDtypeStruct(xr.shape, jnp.float32)] * 2
+
+    if fuse:
+        er, ei = epilogue
+        blocks_per_period = er.shape[0] // bt
+        epi_spec = pl.BlockSpec((bt, n), lambda i: (i % blocks_per_period, 0))
+    elif g_n:
+        # the epilogue slot carries only the (1,) global row offset scalar
+        er = row_off.reshape(1).astype(jnp.int32)
+        ei = jnp.zeros((1,), jnp.int32)
+        epi_spec = pl.BlockSpec((1,), lambda i: (0,))
+    else:
+        # Dummy 1-row operand; never read.
+        er = ei = jnp.zeros((bt, n), jnp.float32)
+        epi_spec = pl.BlockSpec((bt, n), lambda i: (0, 0))
+
+    def table_spec(shape):
+        return pl.BlockSpec(shape, lambda i: tuple(0 for _ in shape))
+
+    if n <= DIRECT_N:
+        wr, wi = (jnp.asarray(a) for a in fft_plan.dft_matrix(n))
+        kernel = functools.partial(_dft_kernel, fuse_epilogue=fuse,
+                                   global_n=g_n)
+        yr, yi = pl.pallas_call(
+            kernel,
+            grid=grid,
+            in_specs=[row_spec, row_spec,
+                      table_spec((n, n)), table_spec((n, n)),
+                      epi_spec, epi_spec],
+            out_specs=[row_spec, row_spec],
+            out_shape=out_shape,
+            interpret=interpret,
+            name=f"dft_direct_{n}",
+        )(xr, xi, wr, wi, er, ei)
+    else:
+        n1, n2 = p.n1, p.n2
+        w1r, w1i = (jnp.asarray(a) for a in fft_plan.dft_matrix(n1))
+        w2r, w2i = (jnp.asarray(a) for a in fft_plan.dft_matrix(n2))
+        tr, ti = (jnp.asarray(a.T.copy()) for a in fft_plan.twiddle_table(n1, n2, n))
+        kernel = functools.partial(_matfft_kernel, n1=n1, n2=n2,
+                                   fuse_epilogue=fuse, global_n=g_n)
+        yr, yi = pl.pallas_call(
+            kernel,
+            grid=grid,
+            in_specs=[row_spec, row_spec,
+                      table_spec((n1, n1)), table_spec((n1, n1)),
+                      table_spec((n2, n1)), table_spec((n2, n1)),
+                      table_spec((n2, n2)), table_spec((n2, n2)),
+                      epi_spec, epi_spec],
+            out_specs=[row_spec, row_spec],
+            out_shape=out_shape,
+            interpret=interpret,
+            name=f"matfft_{n1}x{n2}",
+        )(xr, xi, w1r, w1i, tr, ti, w2r, w2i, er, ei)
+
+    if pad:
+        yr, yi = yr[:rows], yi[:rows]
+    return yr, yi

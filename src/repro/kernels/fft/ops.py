@@ -1,0 +1,165 @@
+"""Public FFT ops: jit'd wrappers around the Pallas kernels.
+
+Hierarchy (mirrors the paper's block decomposition, DESIGN.md §2):
+
+  level 0  (VMEM/MXU)   matfft kernel, n <= plan.MAX_LEAF
+  level 1  (HBM, here)  host four-step n = n1*n2, leaf = level 0, with the
+                        outer twiddle FUSED into the first leaf's epilogue
+  level 2  (ICI)        cross-device four-step — core/fft/distributed.py,
+                        which calls back into these ops for local work
+
+``interpret=None`` auto-selects interpret mode off-TPU so the same code
+runs on this CPU container and on real hardware.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.fft import plan as fft_plan
+from repro.kernels.fft import ref as fft_ref
+from repro.kernels.fft.matfft import matfft
+from repro.kernels.fft.stockham import stockham_fft
+
+Planar = tuple[jnp.ndarray, jnp.ndarray]
+
+
+def _auto_interpret(interpret: bool | None) -> bool:
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret
+
+
+def _leaf(xr, xi, impl: str, interpret: bool, epilogue=None, batch_tile=None):
+    if impl == "matfft":
+        return matfft(xr, xi, epilogue=epilogue, batch_tile=batch_tile,
+                      interpret=interpret)
+    if impl == "stockham":
+        if epilogue is not None:
+            yr, yi = stockham_fft(xr, xi, batch_tile=batch_tile,
+                                  interpret=interpret)
+            er, ei = epilogue
+            period = er.shape[0]
+            rows = yr.shape[0]
+            er = jnp.tile(er, (rows // period, 1))
+            ei = jnp.tile(ei, (rows // period, 1))
+            return yr * er - yi * ei, yr * ei + yi * er
+        return stockham_fft(xr, xi, batch_tile=batch_tile, interpret=interpret)
+    if impl == "ref":
+        yr, yi = fft_ref.fft_ref(xr, xi)
+        if epilogue is not None:
+            er, ei = epilogue
+            period = er.shape[0]
+            er = jnp.tile(er, (yr.shape[0] // period, 1))
+            ei = jnp.tile(ei, (yr.shape[0] // period, 1))
+            return yr * er - yi * ei, yr * ei + yi * er
+        return yr, yi
+    raise ValueError(f"unknown fft impl {impl!r}")
+
+
+def fft(xr: jnp.ndarray, xi: jnp.ndarray, *, impl: str = "matfft",
+        interpret: bool | None = None, batch_tile: int | None = None,
+        global_twiddle=None) -> Planar:
+    """Batched forward FFT along the last axis of planar float32 arrays.
+
+    Any leading batch shape; last-axis length must be a power of two up to
+    MAX_LEAF**2 (single device). Larger transforms go through
+    core/fft/distributed.py.
+    """
+    interpret = _auto_interpret(interpret)
+    batch_shape, n = xr.shape[:-1], xr.shape[-1]
+    if n == 1:
+        return xr, xi
+    fft_plan.log2i(n)
+    rows = 1
+    for d in batch_shape:
+        rows *= d
+    xr2 = xr.reshape(rows, n)
+    xi2 = xi.reshape(rows, n)
+
+    p = fft_plan.make_plan(n)
+    if p.levels == 1:
+        if global_twiddle is not None and impl == "matfft":
+            # fused distributed twiddle (core/fft/distributed.py): computed
+            # on the fly in the kernel epilogue, no HBM table
+            yr, yi = matfft(xr2, xi2, global_twiddle=global_twiddle,
+                            batch_tile=batch_tile,
+                            interpret=_auto_interpret(interpret))
+        else:
+            yr, yi = _leaf(xr2, xi2, impl, interpret, batch_tile=batch_tile)
+    else:
+        if global_twiddle is not None:
+            raise ValueError("global_twiddle requires a single-level plan")
+        yr, yi = _four_step(xr2, xi2, p.n1, p.n2, impl, interpret, batch_tile)
+    return yr.reshape(*batch_shape, n), yi.reshape(*batch_shape, n)
+
+
+def _four_step(xr, xi, n1: int, n2: int, impl: str, interpret: bool,
+               batch_tile: int | None) -> Planar:
+    """Host-level four-step: two batched leaf passes + transposes.
+
+    Pass 1 FFTs the n1-columns (rows keyed by (b, i2)) and fuses the outer
+    twiddle W_N^{o1*i2} into the leaf epilogue: the epilogue operand is just
+    the (n2, n1) table indexed periodically — no O(batch*n) twiddle tensor
+    is ever materialized (the HBM-traffic analogue of the paper's
+    one-memcpy-per-block rule).
+    """
+    rows, n = xr.shape
+    assert n == n1 * n2
+
+    # T[o1, i2] -> transpose to (i2, o1): row (b, i2) of pass-1 output gets
+    # multiplied by T^T[i2, :]. Periodic with period n2 in the row index.
+    tr, ti = fft_plan.twiddle_table(n1, n2, n)
+    epi = (jnp.asarray(tr.T.copy()), jnp.asarray(ti.T.copy()))
+
+    def to_cols(a):  # (rows, n1*n2) -> (rows*n2, n1)
+        return a.reshape(rows, n1, n2).swapaxes(1, 2).reshape(rows * n2, n1)
+
+    ar, ai = _leaf(to_cols(xr), to_cols(xi), impl, interpret,
+                   epilogue=epi, batch_tile=batch_tile)
+
+    def to_rows(a):  # (rows*n2, n1) -> (rows*n1, n2)
+        return a.reshape(rows, n2, n1).swapaxes(1, 2).reshape(rows * n1, n2)
+
+    cr, ci = _leaf(to_rows(ar), to_rows(ai), impl, interpret,
+                   batch_tile=batch_tile)
+
+    def out_order(a):  # rows (b, o1), cols o2 -> flat o = o2*n1 + o1
+        return a.reshape(rows, n1, n2).swapaxes(1, 2).reshape(rows, n)
+
+    return out_order(cr), out_order(ci)
+
+
+def ifft(xr: jnp.ndarray, xi: jnp.ndarray, **kw) -> Planar:
+    """Inverse FFT via the conjugation identity: ifft(x) = conj(fft(conj(x)))/n."""
+    n = xr.shape[-1]
+    yr, yi = fft(xr, -xi, **kw)
+    return yr / n, -yi / n
+
+
+def fft_c64(x: jnp.ndarray, **kw) -> jnp.ndarray:
+    """complex64 convenience wrapper."""
+    yr, yi = fft(jnp.real(x).astype(jnp.float32),
+                 jnp.imag(x).astype(jnp.float32), **kw)
+    return (yr + 1j * yi).astype(jnp.complex64)
+
+
+def ifft_c64(x: jnp.ndarray, **kw) -> jnp.ndarray:
+    yr, yi = ifft(jnp.real(x).astype(jnp.float32),
+                  jnp.imag(x).astype(jnp.float32), **kw)
+    return (yr + 1j * yi).astype(jnp.complex64)
+
+
+def rfft(x: jnp.ndarray, **kw) -> Planar:
+    """Real-input FFT; returns planar one-sided spectrum (n//2 + 1 bins)."""
+    n = x.shape[-1]
+    yr, yi = fft(x.astype(jnp.float32), jnp.zeros_like(x, jnp.float32), **kw)
+    return yr[..., : n // 2 + 1], yi[..., : n // 2 + 1]
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "interpret", "batch_tile"))
+def fft_jit(xr, xi, *, impl="matfft", interpret=None, batch_tile=None):
+    return fft(xr, xi, impl=impl, interpret=interpret, batch_tile=batch_tile)

@@ -1,0 +1,139 @@
+"""FFT planning helpers: factorizations and twiddle tables.
+
+The paper's CUFFT "batched plan" becomes, on TPU, a static factorization of
+the transform length into MXU-friendly GEMM factors plus precomputed twiddle
+tables. Everything here is host-side numpy (float64 internally, cast on
+export) and cached — the analogue of ``cufftPlanMany`` construction.
+
+Naming follows the classic four-step (Bailey) decomposition of a length-N
+DFT with N = n1 * n2, input index i = i1*n2 + i2, output index o = o2*n1 + o1:
+
+    A[o1, i2] = sum_i1 x[i1, i2] * W_{n1}^{i1*o1}        (column DFTs)
+    B[o1, i2] = A[o1, i2] * W_N^{o1*i2}                  (twiddle)
+    C[o1, o2] = sum_i2 B[o1, i2] * W_{n2}^{i2*o2}        (row DFTs)
+    X[o2*n1 + o1] = C[o1, o2]                            (transpose)
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from dataclasses import dataclass
+
+import numpy as np
+
+# Maximum transform length handled directly by one kernel invocation
+# (a (batch_tile x N) tile plus two DFT matrices must fit in ~16MB VMEM).
+MAX_LEAF = 16384
+
+
+def is_pow2(n: int) -> bool:
+    return n > 0 and (n & (n - 1)) == 0
+
+
+def log2i(n: int) -> int:
+    if not is_pow2(n):
+        raise ValueError(f"length must be a power of two, got {n}")
+    return n.bit_length() - 1
+
+
+def split_pow2(n: int, max_leaf: int = MAX_LEAF) -> tuple[int, int]:
+    """Split n = n1 * n2 (both pow2, both <= max_leaf), near-square.
+
+    Near-square factors minimize total GEMM MACs: cost ~ N*(n1 + n2).
+    """
+    p = log2i(n)
+    n1 = 1 << (p // 2)
+    n2 = 1 << (p - p // 2)  # n2 >= n1
+    if n2 > max_leaf:
+        raise ValueError(f"cannot split {n} into factors <= {max_leaf}")
+    return n1, n2
+
+
+@functools.lru_cache(maxsize=None)
+def dft_matrix(n: int) -> tuple[np.ndarray, np.ndarray]:
+    """Planar (re, im) forward DFT matrix W[i, o] = exp(-2j*pi*i*o/n), f32."""
+    idx = np.arange(n, dtype=np.float64)
+    ang = -2.0 * math.pi * np.outer(idx, idx) / n
+    return np.cos(ang).astype(np.float32), np.sin(ang).astype(np.float32)
+
+
+@functools.lru_cache(maxsize=None)
+def twiddle_table(n1: int, n2: int, n: int) -> tuple[np.ndarray, np.ndarray]:
+    """Planar inner twiddle T[o1, i2] = exp(-2j*pi*o1*i2/n), shape (n1, n2)."""
+    o1 = np.arange(n1, dtype=np.float64)
+    i2 = np.arange(n2, dtype=np.float64)
+    ang = -2.0 * math.pi * np.outer(o1, i2) / n
+    return np.cos(ang).astype(np.float32), np.sin(ang).astype(np.float32)
+
+
+@functools.lru_cache(maxsize=None)
+def stockham_twiddles(n: int) -> tuple[np.ndarray, np.ndarray]:
+    """Packed per-stage twiddles for the radix-2 Stockham kernel.
+
+    Stage s (s = 0..log2(n)-1) uses l = n >> (s+1) twiddles
+    w_j = exp(-2j*pi*j/(2l)), j in [0, l). They are packed contiguously:
+    stage 0 at offset 0 (l = n/2), stage 1 at offset n/2 (l = n/4), ...
+    Total packed length = n - 1; padded to n for a clean block shape.
+    """
+    re = np.zeros((n,), dtype=np.float32)
+    im = np.zeros((n,), dtype=np.float32)
+    off = 0
+    l = n // 2
+    while l >= 1:
+        j = np.arange(l, dtype=np.float64)
+        ang = -2.0 * math.pi * j / (2 * l)
+        re[off:off + l] = np.cos(ang)
+        im[off:off + l] = np.sin(ang)
+        off += l
+        l //= 2
+    return re, im
+
+
+def stockham_stage_offsets(n: int) -> list[tuple[int, int, int]]:
+    """[(offset, l, m)] per stage for the packed twiddle layout above."""
+    out = []
+    off, l, m = 0, n // 2, 1
+    while l >= 1:
+        out.append((off, l, m))
+        off += l
+        l //= 2
+        m *= 2
+    return out
+
+
+@dataclass(frozen=True)
+class FftPlan:
+    """Execution plan for a batched 1-D FFT of length ``n``.
+
+    levels == 1: single kernel call (n <= max_leaf).
+    levels == 2: host-level four-step with leaf kernel calls on both passes.
+    (Distributed cross-device planning lives in core/fft/distributed.py and
+    composes on top of this plan for the per-device local work.)
+    """
+
+    n: int
+    levels: int
+    n1: int  # levels==2: outer factor (column count);   levels==1: in-kernel n1
+    n2: int  # levels==2: inner factor (row FFT length); levels==1: in-kernel n2
+
+    @property
+    def flops(self) -> float:
+        """Algorithmic complex-FLOPs (5 n log2 n), the roofline numerator."""
+        return 5.0 * self.n * log2i(self.n)
+
+    @property
+    def gemm_macs(self) -> float:
+        """Actual real MACs issued by the matmul formulation (per batch row)."""
+        if self.levels == 1:
+            return 4.0 * self.n * (self.n1 + self.n2)
+        f1, f2 = split_pow2(self.n1), split_pow2(self.n2)
+        return 4.0 * self.n * (f1[0] + f1[1] + f2[0] + f2[1])
+
+
+def make_plan(n: int, max_leaf: int = MAX_LEAF) -> FftPlan:
+    if n <= max_leaf:
+        n1, n2 = (1, n) if n <= 2 else split_pow2(n, max_leaf)
+        return FftPlan(n=n, levels=1, n1=n1, n2=n2)
+    n1, n2 = split_pow2(n, max_leaf)
+    return FftPlan(n=n, levels=2, n1=n1, n2=n2)

@@ -1,0 +1,71 @@
+"""Pure-jnp oracles for the FFT kernels.
+
+Everything here is the *reference* semantics the Pallas kernels must match:
+``fft_ref`` delegates to jnp.fft (pocketfft on CPU, itself a trusted oracle),
+and ``four_step_ref`` spells out the Bailey decomposition in plain jnp so the
+kernel's internal algebra can be cross-checked stage by stage.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.fft import plan as fft_plan
+
+
+def fft_ref(xr: jnp.ndarray, xi: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Planar forward FFT along the last axis via jnp.fft."""
+    x = jnp.asarray(xr, jnp.float32) + 1j * jnp.asarray(xi, jnp.float32)
+    y = jnp.fft.fft(x, axis=-1)
+    return jnp.real(y).astype(jnp.float32), jnp.imag(y).astype(jnp.float32)
+
+
+def ifft_ref(xr: jnp.ndarray, xi: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    x = jnp.asarray(xr, jnp.float32) + 1j * jnp.asarray(xi, jnp.float32)
+    y = jnp.fft.ifft(x, axis=-1)
+    return jnp.real(y).astype(jnp.float32), jnp.imag(y).astype(jnp.float32)
+
+
+def _cmul(ar, ai, br, bi):
+    return ar * br - ai * bi, ar * bi + ai * br
+
+
+def _cmatmul(ar, ai, br, bi):
+    """Complex matmul on planar operands: (ar+i*ai) @ (br+i*bi)."""
+    rr = ar @ br - ai @ bi
+    ri = ar @ bi + ai @ br
+    return rr, ri
+
+
+def four_step_ref(xr: jnp.ndarray, xi: jnp.ndarray, n1: int, n2: int):
+    """Four-step DFT of length n = n1*n2 along the last axis, pure jnp.
+
+    Mirrors plan.py's index convention exactly; used to validate both the
+    in-kernel GEMM formulation and the distributed shard_map version.
+    """
+    n = n1 * n2
+    assert xr.shape[-1] == n
+    batch = xr.shape[:-1]
+    w1r, w1i = (jnp.asarray(a) for a in fft_plan.dft_matrix(n1))
+    w2r, w2i = (jnp.asarray(a) for a in fft_plan.dft_matrix(n2))
+    tr, ti = (jnp.asarray(a) for a in fft_plan.twiddle_table(n1, n2, n))
+
+    # x[i1, i2] with i = i1*n2 + i2
+    xr2 = xr.reshape(*batch, n1, n2)
+    xi2 = xi.reshape(*batch, n1, n2)
+
+    # A[o1, i2] = sum_i1 x[i1, i2] W_{n1}[i1, o1]  -> contract over axis -2.
+    ar = jnp.einsum("...ij,io->...oj", xr2, w1r) - jnp.einsum("...ij,io->...oj", xi2, w1i)
+    ai = jnp.einsum("...ij,io->...oj", xr2, w1i) + jnp.einsum("...ij,io->...oj", xi2, w1r)
+
+    # B = A * T (inner twiddle)
+    br, bi = _cmul(ar, ai, tr, ti)
+
+    # C[o1, o2] = sum_i2 B[o1, i2] W_{n2}[i2, o2]
+    cr = br @ w2r - bi @ w2i
+    ci = br @ w2i + bi @ w2r
+
+    # X[o2*n1 + o1] = C[o1, o2] -> transpose then flatten.
+    outr = jnp.swapaxes(cr, -1, -2).reshape(*batch, n)
+    outi = jnp.swapaxes(ci, -1, -2).reshape(*batch, n)
+    return outr, outi

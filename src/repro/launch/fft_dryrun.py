@@ -1,0 +1,105 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("REPRO_EXTRA_XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+"""Dry-run + roofline for the paper's own workload on the production mesh.
+
+Variants measured (each lower+compile on the 256-chip and 512-chip meshes,
+costs are exact — no scans in this path):
+
+  segmented      the paper's map-only regime: batch of independent FFTs,
+                 zero collectives (the baseline reproduction)
+  dist_base      distributed four-step, natural output order, elementwise
+                 jnp twiddle (paper-faithful cluster FFT: their §VI plan)
+  dist_fused     + twiddle fused into the Pallas leaf kernel epilogue
+                 (computed on the fly from iota: no HBM table, no extra
+                 output round-trip)
+  dist_transposed + natural_order=False (skip all_to_all #3, FFTW
+                 TRANSPOSED_OUT) for convolution-style consumers
+
+  PYTHONPATH=src python -m repro.launch.fft_dryrun --n 268435456
+"""
+
+import argparse
+import json
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.fft import distributed
+from repro.core.fft.segmented import segmented_fft
+from repro.kernels.fft import ops as fft_ops
+from repro.launch.hlo_analysis import collective_stats
+from repro.launch.mesh import make_production_mesh
+
+PEAK, HBM, ICI = 197e12, 819e9, 50e9
+
+
+def measure(fn, args_abs, name):
+    lowered = jax.jit(fn).lower(*args_abs)
+    compiled = lowered.compile()
+    cost = compiled.cost_analysis()
+    mem = compiled.memory_analysis()
+    colls = collective_stats(compiled.as_text())
+    flops = cost.get("flops", 0.0)
+    byts = cost.get("bytes accessed", 0.0)
+    rec = {
+        "name": name,
+        "flops": flops,
+        "bytes": byts,
+        "collective_bytes": colls["total_bytes"],
+        "a2a_bytes": colls["all-to-all"]["bytes"],
+        "temp_bytes": mem.temp_size_in_bytes,
+        "compute_s": flops / PEAK,
+        "memory_s": byts / HBM,
+        "collective_s": colls["total_bytes"] / ICI,
+    }
+    rec["bound"] = max(("compute_s", "memory_s", "collective_s"),
+                       key=lambda k: rec[k])
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=1 << 28,
+                    help="global FFT length (distributed variants)")
+    ap.add_argument("--seg-batch", type=int, default=1 << 15)
+    ap.add_argument("--seg-len", type=int, default=4096)
+    ap.add_argument("--mesh", default="single_pod",
+                    choices=["single_pod", "multi_pod"])
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+
+    mesh = make_production_mesh(multi_pod=args.mesh == "multi_pod")
+    axes = tuple(mesh.shape.keys())
+    sds = jax.ShapeDtypeStruct
+    recs = []
+
+    # paper regime: segmented map-only
+    seg = sds((args.seg_batch, args.seg_len), jnp.float32)
+    recs.append(measure(
+        lambda a, b: segmented_fft(a, b, mesh, batch_axes=axes),
+        (seg, seg), "segmented"))
+
+    # distributed four-step variants
+    sig = sds((args.n,), jnp.float32)
+    for name, kw in (
+        ("dist_base", dict(natural_order=True, fuse_twiddle=False)),
+        ("dist_fused", dict(natural_order=True, fuse_twiddle=True)),
+        ("dist_transposed", dict(natural_order=False, fuse_twiddle=True)),
+    ):
+        recs.append(measure(
+            lambda a, b, kw=kw: distributed.distributed_fft(
+                a, b, mesh, axes, **kw),
+            (sig, sig), name))
+
+    for r in recs:
+        print(json.dumps(r))
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump({"n": args.n, "mesh": args.mesh, "variants": recs}, f,
+                      indent=1)
+
+
+if __name__ == "__main__":
+    main()

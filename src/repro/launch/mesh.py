@@ -1,0 +1,26 @@
+"""Production mesh construction.
+
+A function (not a module-level constant) so importing this module never
+touches JAX device state — the dry-run must set XLA_FLAGS before any
+device query, and tests/benches must keep seeing 1 CPU device.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips single pod; (2,16,16) = 512 chips across 2 pods."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model_axis: int = 1):
+    """Whatever this host actually has (tests / examples): 1-D data mesh
+    or a small (data, model) mesh when enough local devices exist."""
+    n = len(jax.devices())
+    if model_axis > 1 and n % model_axis == 0:
+        return jax.make_mesh((n // model_axis, model_axis), ("data", "model"))
+    return jax.make_mesh((n,), ("data",))

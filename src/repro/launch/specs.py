@@ -1,0 +1,81 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every (arch x shape) cell.
+
+No device allocation ever happens here — everything is abstract, exactly
+like shannon/kernels' dry-run pattern. Frontend stubs per the assignment:
+whisper gets precomputed frame embeddings, internvl2 gets precomputed patch
+embeddings.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.transformer import TransformerLM
+
+
+@dataclass(frozen=True)
+class ShapeCase:
+    name: str
+    seq_len: int
+    global_batch: int
+    mode: str  # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeCase("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeCase("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeCase("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeCase("long_500k", 524_288, 1, "decode"),
+}
+
+
+def cell_runnable(cfg: ModelConfig, shape: str) -> tuple[bool, str]:
+    """(runnable, reason). long_500k only for sub-quadratic archs (spec)."""
+    if shape == "long_500k" and not cfg.subquadratic:
+        return False, ("skipped: pure full-attention arch; long_500k needs "
+                       "sub-quadratic attention (DESIGN.md §5)")
+    return True, ""
+
+
+def _i32(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def _bf16(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.bfloat16)
+
+
+def input_specs(cfg: ModelConfig, shape: str):
+    """Abstract model inputs for one cell.
+
+    train:   {"tokens","labels"[,"frames","patches"]}
+    prefill: {"tokens"[,"frames","patches"]}
+    decode:  (caches, token, pos)  — caches built via jax.eval_shape
+    """
+    case = SHAPES[shape]
+    b, s = case.global_batch, case.seq_len
+
+    if case.mode in ("train", "prefill"):
+        batch = {}
+        if cfg.encoder_layers:  # whisper: seq splits 1:1 enc frames : dec toks
+            batch["tokens"] = _i32((b, s // 2))
+            batch["frames"] = _bf16((b, s // 2, cfg.d_model))
+        elif cfg.num_prefix_embeds:  # vlm: patch prefix + text
+            batch["tokens"] = _i32((b, s - cfg.num_prefix_embeds))
+            batch["patches"] = _bf16((b, cfg.num_prefix_embeds, cfg.d_model))
+        else:
+            batch["tokens"] = _i32((b, s))
+        if case.mode == "train":
+            batch["labels"] = _i32(batch["tokens"].shape)
+        return batch
+
+    # decode: one new token against a cache of length s
+    model = TransformerLM(cfg)
+    caches = jax.eval_shape(lambda: model.init_cache(b, s))
+    token = _i32((b, 1))
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    return caches, token, pos

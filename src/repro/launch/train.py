@@ -1,0 +1,69 @@
+"""Training launcher (host-scale; the production mesh path is dryrun.py).
+
+Trains any assigned arch at a reduced or custom size on local devices:
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b --reduced \
+      --steps 200 --batch 8 --seq 256 --ckpt-dir /tmp/ckpt
+
+Auto-resumes from the newest committed checkpoint in --ckpt-dir (kill it
+mid-run and relaunch to see the fault-tolerance path).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+
+from repro.configs import ARCHS, get_config
+from repro.data import TokenPipeline, synthetic_corpus
+from repro.launch.mesh import make_host_mesh
+from repro.models.transformer import TransformerLM
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=ARCHS)
+    ap.add_argument("--reduced", action="store_true",
+                    help="use the smoke-test-sized config")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--optimizer", default="adamw")
+    ap.add_argument("--grad-compression", action="store_true")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--data-dir", default="/tmp/repro_corpus")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    model = TransformerLM(cfg)
+
+    store = synthetic_corpus(args.data_dir, vocab_size=cfg.vocab_size,
+                             n_tokens=max(4_000_000,
+                                          args.batch * (args.seq + 1) * 50),
+                             seed=args.seed)
+    pipe = TokenPipeline(store, batch=args.batch, seq=args.seq)
+
+    tc = TrainerConfig(optimizer=args.optimizer, base_lr=args.lr,
+                       warmup_steps=max(args.steps // 10, 1),
+                       total_steps=args.steps,
+                       grad_compression=args.grad_compression,
+                       ckpt_dir=args.ckpt_dir)
+    trainer = Trainer(model, tc, mesh=None)
+    state = trainer.restore_or_init(jax.random.PRNGKey(args.seed))
+    start = int(state["step"])
+    if start:
+        print(f"resumed from step {start}")
+    state, history = trainer.run(state, iter(pipe), steps=args.steps - start)
+    for m in history:
+        print(json.dumps(m))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,277 @@
+"""Attention: GQA with chunked (flash-style) softmax, SWA, qk-norm, caches.
+
+Memory/FLOP design (matters for §Roofline):
+  * Scores are never materialized at (S, S): the query axis is split into
+    static chunks (Python-unrolled), and each q-chunk scans its *statically
+    bounded* kv range — causal chunks only see kv <= chunk end, SWA chunks
+    only see the trailing window. So causal masking waste is limited to one
+    boundary block per row instead of the 2x of a naive full-rectangle scan,
+    and peak memory is O(q_chunk * kv_chunk) per head group.
+  * GQA uses a grouped einsum (B,S,KV,G,hd) so KV heads are never repeated
+    in memory.
+  * Decode supports full caches and ring-buffer SWA caches (the latter make
+    long_500k cells O(window) memory for SWA archs — DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import rms_norm, rope
+from repro.models.scanning import maybe_scan
+from repro.sharding.rules import ParamSpec
+
+NEG = -1e30
+
+
+# ---------------------------------------------------------------------------
+# parameter specs
+
+
+def attn_specs(cfg, stacked: tuple[int, ...] = (), cross: bool = False) -> dict:
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    pre = tuple("layers" for _ in stacked)
+    out = {
+        "wq": ParamSpec(stacked + (d, h, hd), pre + ("d_model", "heads", "head_dim")),
+        "wk": ParamSpec(stacked + (d, kv, hd), pre + ("d_model", "kv_heads", "head_dim")),
+        "wv": ParamSpec(stacked + (d, kv, hd), pre + ("d_model", "kv_heads", "head_dim")),
+        "wo": ParamSpec(stacked + (h, hd, d), pre + ("heads", "head_dim", "d_model")),
+    }
+    if cfg.qkv_bias and not cross:
+        out["bq"] = ParamSpec(stacked + (h, hd), pre + ("heads", "head_dim"), init="zeros")
+        out["bk"] = ParamSpec(stacked + (kv, hd), pre + ("kv_heads", "head_dim"), init="zeros")
+        out["bv"] = ParamSpec(stacked + (kv, hd), pre + ("kv_heads", "head_dim"), init="zeros")
+    if cfg.qk_norm and not cross:
+        out["q_norm"] = ParamSpec(stacked + (hd,), pre + ("head_dim",), init="ones")
+        out["k_norm"] = ParamSpec(stacked + (hd,), pre + ("head_dim",), init="ones")
+    return out
+
+
+# ---------------------------------------------------------------------------
+# projections
+
+
+def _qkv(cfg, p, x, pos_offset, theta):
+    """x (B,S,d) -> q (B,S,H,hd), k/v (B,S,KV,hd), rope'd + normed."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(x.dtype))
+    if cfg.qkv_bias and "bq" in p:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    if cfg.qk_norm and "q_norm" in p:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if theta is not None:
+        s = x.shape[1]
+        positions = pos_offset + jnp.arange(s)
+        q = rope(q, positions, theta)
+        k = rope(k, positions, theta)
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# chunked softmax attention core
+
+
+def _chunk_body(q, k, v, q_pos, k_pos, scale, window, causal):
+    """One (q_chunk x kv_chunk) tile of online softmax. Returns (s_max, p, pv).
+
+    q: (B, qc, KV, G, hd); k, v: (B, kc, KV, hd).
+    """
+    s = jnp.einsum("bqkgh,btkh->bkgqt", q, k).astype(jnp.float32) * scale
+    mask = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        mask &= k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        mask &= q_pos[:, None] - k_pos[None, :] < window
+    mask = mask[None, None, None]  # (1,1,1,qc,kc)
+    s = jnp.where(mask, s, NEG)
+    return s, mask
+
+
+def chunked_attention(q, k, v, *, causal=True, window=None, pos_offset=0,
+                      q_chunk=2048, kv_chunk=1024, scale=None):
+    """Flash-style attention. q (B,Sq,H,hd); k,v (B,Skv,KV,hd) -> (B,Sq,H,hd).
+
+    ``pos_offset``: global position of q[0] minus position of k[0]
+    (0 for self-attention over the same spans).
+    """
+    b, sq, h, hd = q.shape
+    skv, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    scale = scale if scale is not None else hd ** -0.5
+    qg = q.reshape(b, sq, kvh, g, hd)
+
+    q_chunk = min(q_chunk, sq)
+    kv_chunk = min(kv_chunk, skv)
+    out_blocks = []
+    for q0 in range(0, sq, q_chunk):
+        qc = min(q_chunk, sq - q0)
+        q_blk = qg[:, q0:q0 + qc]
+        q_pos = pos_offset + q0 + jnp.arange(qc)
+
+        # Static kv bounds for this q chunk (the FLOP-honesty trick).
+        hi = min(skv, _ceil_to(pos_offset + q0 + qc, kv_chunk)) if causal else skv
+        lo = 0
+        if window is not None:
+            lo = max(0, _floor_to(pos_offset + q0 - window + 1, kv_chunk))
+        k_rng = k[:, lo:hi]
+        v_rng = v[:, lo:hi]
+        n_blk = -(-(hi - lo) // kv_chunk)
+        pad = n_blk * kv_chunk - (hi - lo)
+        if pad:
+            k_rng = jnp.pad(k_rng, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            v_rng = jnp.pad(v_rng, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_st = k_rng.reshape(b, n_blk, kv_chunk, kvh, hd).swapaxes(0, 1)
+        v_st = v_rng.reshape(b, n_blk, kv_chunk, kvh, hd).swapaxes(0, 1)
+
+        def step(carry, blk_in, q_blk=q_blk, q_pos=q_pos, lo=lo, hi=hi):
+            m, l, acc = carry
+            k_blk, v_blk, idx = blk_in
+            k_pos = lo + idx * kv_chunk + jnp.arange(kv_chunk)
+            s, mask = _chunk_body(q_blk, k_blk, v_blk, q_pos, k_pos, scale,
+                                  window, causal)
+            # also mask kv padding beyond hi
+            s = jnp.where((k_pos < hi)[None, None, None, None, :], s, NEG)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            p = jnp.where(s <= NEG / 2, 0.0, p)
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            pv = jnp.einsum("bkgqt,btkh->bkgqh", p.astype(v_blk.dtype), v_blk)
+            acc_new = acc * corr[..., None].astype(acc.dtype) + pv.astype(jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, kvh, g, qc), NEG, jnp.float32)
+        l0 = jnp.zeros((b, kvh, g, qc), jnp.float32)
+        a0 = jnp.zeros((b, kvh, g, qc, hd), jnp.float32)
+        # checkpoint: the backward pass recomputes the (qc, kc) score tile
+        # per block instead of saving it (flash-attention memory behavior);
+        # without this, scan residuals hold n_blk score tiles per layer.
+        (m, l, acc), _ = maybe_scan(
+            jax.checkpoint(step), (m0, l0, a0),
+            (k_st, v_st, jnp.arange(n_blk)))
+        out = acc / jnp.maximum(l, 1e-20)[..., None]
+        # (B,KV,G,qc,hd) -> (B,qc,KV,G,hd) -> (B,qc,H,hd)
+        out = out.transpose(0, 3, 1, 2, 4).reshape(b, qc, h, hd)
+        out_blocks.append(out.astype(q.dtype))
+    return jnp.concatenate(out_blocks, axis=1) if len(out_blocks) > 1 else out_blocks[0]
+
+
+def _ceil_to(x, m):
+    return -(-x // m) * m
+
+
+def _floor_to(x, m):
+    return (x // m) * m
+
+
+# ---------------------------------------------------------------------------
+# block-level entry points
+
+
+def self_attention(cfg, p, x, *, window=None, theta=None, pos_offset=0,
+                   causal=True, return_kv=False):
+    """Training / prefill self-attention over x (B,S,d)."""
+    theta = cfg.rope_theta if theta is None else theta
+    q, k, v = _qkv(cfg, p, x, pos_offset, theta)
+    out = chunked_attention(
+        q, k, v, causal=causal, window=window, pos_offset=0,
+        q_chunk=cfg.attn_q_chunk, kv_chunk=cfg.attn_kv_chunk)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    if return_kv:
+        return y, (k, v)
+    return y
+
+
+def cross_attention(cfg, p, x, enc_k, enc_v):
+    """Decoder cross-attention (whisper): no rope, no causal mask."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    out = chunked_attention(
+        q, enc_k, enc_v, causal=False, window=None,
+        q_chunk=cfg.attn_q_chunk, kv_chunk=cfg.attn_kv_chunk)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+
+
+def encode_kv(cfg, p, enc_out):
+    """Precompute cross-attention K/V from encoder output (cached once)."""
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, p["wk"].astype(enc_out.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, p["wv"].astype(enc_out.dtype))
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# decode (one token) with full or ring cache
+
+
+def decode_self_attention(cfg, p, x, cache_k, cache_v, pos, *,
+                          window=None, theta=None):
+    """x (B,1,d), cache (B,S_cache,KV,hd), pos: scalar int32 position.
+
+    Returns (y, new_cache_k, new_cache_v). When ``window`` is set and the
+    cache length equals the window, the cache is a ring buffer.
+    """
+    theta = cfg.rope_theta if theta is None else theta
+    b, s_cache, kvh, hd = cache_k.shape
+    h = cfg.num_heads
+    g = h // kvh
+    ring = window is not None and s_cache == window
+
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    k_t = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype))
+    v_t = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(x.dtype))
+    if cfg.qkv_bias and "bq" in p:
+        q = q + p["bq"].astype(x.dtype)
+        k_t = k_t + p["bk"].astype(x.dtype)
+        v_t = v_t + p["bv"].astype(x.dtype)
+    if cfg.qk_norm and "q_norm" in p:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k_t = rms_norm(k_t, p["k_norm"], cfg.norm_eps)
+    if theta is not None:
+        posv = jnp.full((1,), pos)
+        q = rope(q, posv, theta)
+        k_t = rope(k_t, posv, theta)
+
+    slot = (pos % window) if ring else pos
+    cache_k = jax.lax.dynamic_update_slice(cache_k, k_t.astype(cache_k.dtype),
+                                           (0, slot, 0, 0))
+    cache_v = jax.lax.dynamic_update_slice(cache_v, v_t.astype(cache_v.dtype),
+                                           (0, slot, 0, 0))
+
+    idx = jnp.arange(s_cache)
+    if ring:
+        age = (pos - idx) % window
+        valid = age <= jnp.minimum(pos, window - 1)
+    else:
+        valid = idx <= pos
+        if window is not None:
+            valid &= pos - idx < window
+
+    qg = q.reshape(b, 1, kvh, g, hd)
+    s = jnp.einsum("bqkgh,btkh->bkgqt", qg, cache_k.astype(q.dtype))
+    s = s.astype(jnp.float32) * (cfg.head_dim ** -0.5)
+    s = jnp.where(valid[None, None, None, None, :], s, NEG)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqt,btkh->bqkgh", w.astype(q.dtype),
+                     cache_v.astype(q.dtype))
+    out = out.reshape(b, 1, h, hd)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return y, cache_k, cache_v
+
+
+def decode_cross_attention(cfg, p, x, enc_k, enc_v):
+    """One-token cross-attention against a fixed encoder cache."""
+    b, tc, kvh, hd = enc_k.shape
+    h, g = cfg.num_heads, cfg.num_heads // enc_k.shape[2]
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    qg = q.reshape(b, 1, kvh, g, hd)
+    s = jnp.einsum("bqkgh,btkh->bkgqt", qg, enc_k.astype(q.dtype))
+    s = s.astype(jnp.float32) * (cfg.head_dim ** -0.5)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqt,btkh->bqkgh", w.astype(q.dtype),
+                     enc_v.astype(q.dtype)).reshape(b, 1, h, hd)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))

@@ -1,0 +1,105 @@
+"""Shared model primitives: norms, RoPE, activations, losses."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sharding.rules import ParamSpec, constrain
+
+
+# ---------------------------------------------------------------------------
+# norms
+
+
+def rms_norm(x, scale, eps=1e-6, plus_one=False):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    s = (1.0 + scale.astype(jnp.float32)) if plus_one else scale.astype(jnp.float32)
+    return (y * s).astype(dt)
+
+
+def layer_norm(x, scale, bias, eps=1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+def norm_apply(cfg, x, p):
+    if cfg.norm == "layernorm":
+        return layer_norm(x, p["scale"], p["bias"], cfg.norm_eps)
+    plus_one = cfg.post_norms  # gemma-style (1+w) scaling
+    return rms_norm(x, p["scale"], cfg.norm_eps, plus_one=plus_one)
+
+
+def norm_specs(cfg, stacked: tuple[int, ...] = ()) -> dict:
+    d = cfg.d_model
+    axes = tuple("layers" for _ in stacked)
+    out = {"scale": ParamSpec(stacked + (d,), axes + ("d_model",),
+                              init="zeros" if cfg.post_norms else "ones")}
+    if cfg.norm == "layernorm":
+        out["bias"] = ParamSpec(stacked + (d,), axes + ("d_model",), init="zeros")
+    return out
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+
+
+def rope(x, positions, theta: float):
+    """Apply rotary embedding. x: (..., S, H, hd); positions: (..., S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freq = theta ** (-np.arange(0, half, dtype=np.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq  # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]  # (..., S, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
+
+
+def sinusoidal_embed(length: int, d: int) -> np.ndarray:
+    """Whisper-style sinusoidal position table (length, d)."""
+    half = d // 2
+    freq = np.exp(-np.log(10000.0) * np.arange(half) / (half - 1))
+    ang = np.arange(length)[:, None] * freq[None, :]
+    return np.concatenate([np.sin(ang), np.cos(ang)], axis=1).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# activations
+
+
+def activate(name: str, x):
+    if name == "silu":
+        return jax.nn.silu(x)
+    if name == "gelu":
+        return jax.nn.gelu(x)
+    raise ValueError(name)
+
+
+# ---------------------------------------------------------------------------
+# losses
+
+
+def cross_entropy(logits, labels, mask=None, z_loss: float = 0.0):
+    """Mean token NLL with optional validity mask; fp32 throughout."""
+    logits = constrain(logits.astype(jnp.float32),
+                       ("batch", None, "act_vocab"))
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if z_loss:
+        nll = nll + z_loss * lse**2
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

@@ -1,0 +1,144 @@
+"""Chunked linear attention with data-dependent decay (RWKV6 / Mamba2 core).
+
+Recurrence (per head; S is a (dk, dv) state, decay w_t in (0,1)^dk):
+
+    bonus (RWKV6) form:   o_t = q_t S_{t-1} + (q_t . (u * k_t)) v_t
+                          S_t = Diag(w_t) S_{t-1} + k_t (x) v_t
+    inclusive (Mamba2/SSD) form (u=None):
+                          S_t = Diag(w_t) S_{t-1} + k_t (x) v_t
+                          o_t = q_t S_t
+
+Why FFT does NOT apply here (DESIGN.md §5): with data-dependent w_t the
+map x -> o is not a convolution, so the paper's FFT technique cannot
+accelerate it; the chunked scan below is the TPU-efficient form instead.
+
+Numerical design: the naive factorization P[t,s] = (q_t e^{L_t})(k_s e^{-L_s})
+overflows once cumulative decay |L| > ~88 in f32. Instead both sides are
+referenced to the chunk END: P = (q e^{L_q - L_last}) @ (k e^{L_last - L})^T.
+The k-side factors are <= 1; the q-side factors are bounded by the total
+in-chunk decay, so per-step log-decay is clamped to >= MIN_LOG_DECAY
+(applied identically in the naive reference — a decay of e^-5 per step
+zeroes the state within two steps anyway, so the clamp is semantically
+free) keeping every factor < e^80 with chunk=16. Every pairwise PRODUCT has
+exponent L_q(t) - L(s) <= 0, so accumulation is exact-safe, and the intra-
+chunk matrix is a plain MXU matmul — no (c, c, dk) pairwise tensor.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.scanning import maybe_scan
+
+# Per-step log-decay floor (see module header). exp(-5) ~ 0.0067/step.
+MIN_LOG_DECAY = -5.0
+
+
+def naive_gla(q, k, v, log_decay, u=None, initial_state=None):
+    """Reference O(T) scan. q,k,log_decay: (B,T,H,dk); v: (B,T,H,dv)."""
+    b, t, h, dk = q.shape
+    dv = v.shape[-1]
+    log_decay = jnp.maximum(log_decay, MIN_LOG_DECAY)
+    s0 = (initial_state if initial_state is not None
+          else jnp.zeros((b, h, dk, dv), jnp.float32))
+
+    def step(s, xs):
+        qt, kt, vt, lw = xs  # (B,H,dk) x3, v (B,H,dv)
+        w = jnp.exp(lw)
+        if u is None:
+            s = s * w[..., None] + kt[..., None] * vt[..., None, :]
+            o = jnp.einsum("bhk,bhkv->bhv", qt, s)
+        else:
+            o = jnp.einsum("bhk,bhkv->bhv", qt, s)
+            o = o + jnp.einsum("bhk,bhk->bh", qt * u, kt)[..., None] * vt
+            s = s * w[..., None] + kt[..., None] * vt[..., None, :]
+        return s, o
+
+    xs = tuple(jnp.moveaxis(a, 1, 0).astype(jnp.float32)
+               for a in (q, k, v, log_decay))
+    s_fin, o = jax.lax.scan(step, s0, xs)
+    return jnp.moveaxis(o, 0, 1).astype(q.dtype), s_fin
+
+
+def chunked_gla(q, k, v, log_decay, u=None, initial_state=None, chunk=16):
+    """Chunk-parallel equivalent of naive_gla (exact; see module header).
+
+    Shapes: q,k,log_decay (B,T,H,dk); v (B,T,H,dv); u (H,dk) or None.
+    T must be a multiple of ``chunk`` (callers pad). Compute is f32.
+    Returns (out (B,T,H,dv), final_state (B,H,dk,dv)).
+    """
+    b, t, h, dk = q.shape
+    dv = v.shape[-1]
+    assert t % chunk == 0, (t, chunk)
+    n = t // chunk
+    c = chunk
+    f32 = jnp.float32
+
+    qc = q.reshape(b, n, c, h, dk).astype(f32)
+    kc = k.reshape(b, n, c, h, dk).astype(f32)
+    vc = v.reshape(b, n, c, h, dv).astype(f32)
+    lw = jnp.maximum(log_decay.reshape(b, n, c, h, dk).astype(f32),
+                     MIN_LOG_DECAY)
+
+    lcum = jnp.cumsum(lw, axis=2)                      # inclusive L_t
+    lq = lcum if u is None else lcum - lw              # exclusive for bonus form
+    l_last = lcum[:, :, -1:]                           # (B,N,1,H,dk)
+
+    k_state = kc * jnp.exp(l_last - lcum)              # <= 1 factors
+    q_inter = qc * jnp.exp(lq)                         # <= 1 factors
+    chunk_kv = jnp.einsum("bnchk,bnchv->bnhkv", k_state, vc)
+    chunk_decay = jnp.exp(l_last[:, :, 0])             # (B,N,H,dk)
+
+    # intra-chunk matrix as one MXU matmul, both sides referenced to the
+    # chunk end so every pairwise product has exponent <= 0 (module header):
+    # P[t,s] = sum_d q[t,d] e^{Lq_t - L_last} * k[s,d] e^{L_last - L_s}
+    q_shift = qc * jnp.exp(lq - l_last)                # <= e^{c*|MIN|} bounded
+    pmat = jnp.einsum("bnthd,bnshd->bnhts", q_shift, k_state)
+    if u is None:
+        tri = jnp.tril(jnp.ones((c, c), bool))         # s <= t
+    else:
+        tri = jnp.tril(jnp.ones((c, c), bool), k=-1)   # s < t
+    pmat = jnp.where(tri[None, None, None], pmat, 0.0)
+    o_intra = jnp.einsum("bnhts,bnshv->bnthv", pmat, vc)
+
+    if u is not None:
+        bonus = jnp.einsum("bnthk,hk,bnthk->bnth", qc, u.astype(f32), kc)
+        o_intra = o_intra + bonus[..., None] * vc
+
+    s0 = (initial_state if initial_state is not None
+          else jnp.zeros((b, h, dk, dv), f32))
+
+    def scan_chunk(s, xs):
+        q_i, kv_i, dec_i = xs  # (B,c,H,dk), (B,H,dk,dv), (B,H,dk)
+        o_inter = jnp.einsum("bchk,bhkv->bchv", q_i, s)
+        s_new = s * dec_i[..., None] + kv_i
+        return s_new, o_inter
+
+    xs = (jnp.moveaxis(q_inter, 1, 0), jnp.moveaxis(chunk_kv, 1, 0),
+          jnp.moveaxis(chunk_decay, 1, 0))
+    s_fin, o_inter = maybe_scan(scan_chunk, s0, xs)
+    o_inter = jnp.moveaxis(o_inter, 0, 1)              # (B,N,c,H,dv)
+
+    out = (o_intra + o_inter).reshape(b, t, h, dv)
+    return out.astype(q.dtype), s_fin
+
+
+def step_gla(q, k, v, log_decay, u, state):
+    """Single decode step. q,k,log_decay (B,1,H,dk); v (B,1,H,dv).
+
+    Returns (out (B,1,H,dv), new_state).
+    """
+    f32 = jnp.float32
+    qt = q[:, 0].astype(f32)
+    kt = k[:, 0].astype(f32)
+    vt = v[:, 0].astype(f32)
+    w = jnp.exp(jnp.maximum(log_decay[:, 0].astype(f32), MIN_LOG_DECAY))
+    if u is None:
+        state = state * w[..., None] + kt[..., None] * vt[..., None, :]
+        o = jnp.einsum("bhk,bhkv->bhv", qt, state)
+    else:
+        o = jnp.einsum("bhk,bhkv->bhv", qt, state)
+        o = o + jnp.einsum("bhk,bhk->bh", qt * u.astype(f32), kt)[..., None] * vt
+        state = state * w[..., None] + kt[..., None] * vt[..., None, :]
+    return o[:, None].astype(q.dtype), state

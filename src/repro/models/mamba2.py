@@ -1,0 +1,139 @@
+"""Mamba2 (SSD) block, used standalone and inside the Zamba2 hybrid.
+
+State-space duality form: per head, scalar decay a_t = exp(-softplus(dt_t +
+dt_bias) * exp(A_log)), shared (ngroups=1) B_t/C_t of size ssm_state, value
+path v_t = dt_t * x_t — i.e. linear attention with q=C, k=B and a scalar
+per-head data-dependent decay, which reuses chunked_gla directly (decay
+vector broadcast over ssm_state).
+
+Like RWKV6 the decay is data-dependent, so the FFT-convolution route is
+inapplicable (DESIGN.md §5); the chunked scan is the efficient TPU form.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import rms_norm
+from repro.models.linear_attn import chunked_gla, step_gla
+from repro.sharding.rules import ParamSpec
+
+
+def mamba2_specs(cfg, stacked: tuple[int, ...] = ()) -> dict:
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    ds = cfg.ssm_state
+    nh = di // cfg.ssm_head_dim
+    cw = cfg.ssm_conv
+    pre = tuple("layers" for _ in stacked)
+
+    def mat(shape, axes, **kw):
+        return ParamSpec(stacked + shape, pre + axes, **kw)
+
+    return {
+        "wz": mat((d, di), ("d_model", "d_ff")),
+        "wx": mat((d, di), ("d_model", "d_ff")),
+        "wB": mat((d, ds), ("d_model", "ssm_state")),
+        "wC": mat((d, ds), ("d_model", "ssm_state")),
+        "wdt": mat((d, nh), ("d_model", "ssm_heads")),
+        "dt_bias": mat((nh,), ("ssm_heads",), init="zeros"),
+        "A_log": mat((nh,), ("ssm_heads",), init="zeros"),
+        "D": mat((nh,), ("ssm_heads",), init="ones"),
+        "conv_w": mat((cw, di), ("conv_width", "d_ff")),
+        "conv_b": mat((di,), ("d_ff",), init="zeros"),
+        "norm_scale": mat((di,), ("d_ff",), init="ones"),
+        "wo": mat((di, d), ("d_ff", "d_model")),
+    }
+
+
+def _causal_conv(x, w, b, carry=None):
+    """Depthwise causal conv over seq. x (B,S,di); w (cw,di).
+
+    carry: (B, cw-1, di) previous inputs for decode; returns (y, new_carry).
+    """
+    cw = w.shape[0]
+    if carry is None:
+        carry = jnp.zeros((x.shape[0], cw - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([carry, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i].astype(x.dtype) for i in range(cw))
+    return y + b.astype(x.dtype), xp[:, -(cw - 1):]
+
+
+def _proj(cfg, p, x):
+    dt_ = x.dtype
+    z = jnp.einsum("bsd,de->bse", x, p["wz"].astype(dt_))
+    xs = jnp.einsum("bsd,de->bse", x, p["wx"].astype(dt_))
+    bmat = jnp.einsum("bsd,dn->bsn", x, p["wB"].astype(dt_))
+    cmat = jnp.einsum("bsd,dn->bsn", x, p["wC"].astype(dt_))
+    dt_raw = jnp.einsum("bsd,dh->bsh", x, p["wdt"].astype(dt_))
+    return z, xs, bmat, cmat, dt_raw
+
+
+def _ssm_inputs(cfg, p, xs_conv, bmat, cmat, dt_raw):
+    """Assemble (q, k, v, log_decay) for chunked_gla."""
+    b, s, di = xs_conv.shape
+    nh = di // cfg.ssm_head_dim
+    ds = cfg.ssm_state
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))  # (B,S,H)
+    a = jnp.exp(p["A_log"].astype(jnp.float32))               # (H,)
+    log_decay = -dt * a                                        # (B,S,H)
+    log_decay = jnp.broadcast_to(log_decay[..., None], (b, s, nh, ds))
+    k = jax.nn.silu(bmat)[:, :, None, :] * jnp.ones((1, 1, nh, 1), bmat.dtype)
+    q = jax.nn.silu(cmat)[:, :, None, :] * jnp.ones((1, 1, nh, 1), cmat.dtype)
+    v = xs_conv.reshape(b, s, nh, cfg.ssm_head_dim) * dt[..., None].astype(xs_conv.dtype)
+    return q, k, v, log_decay, dt
+
+
+def mamba2_block(cfg, p, x, carry=None):
+    """x (B,S,d) -> (y, new_carry). carry = (conv (B,cw-1,di), state)."""
+    b, s, d = x.shape
+    di = cfg.ssm_expand * d
+    nh = di // cfg.ssm_head_dim
+    conv_carry, state = carry if carry is not None else (None, None)
+
+    z, xs, bmat, cmat, dt_raw = _proj(cfg, p, x)
+    xs, conv_carry = _causal_conv(xs, p["conv_w"], p["conv_b"], conv_carry)
+    xs = jax.nn.silu(xs)
+    q, k, v, log_decay, _ = _ssm_inputs(cfg, p, xs, bmat, cmat, dt_raw)
+
+    pad = (-s) % 16
+    if pad:
+        q, k, v, log_decay = (jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                              for a in (q, k, v, log_decay))
+    o, state = chunked_gla(q, k, v, log_decay, u=None, initial_state=state)
+    o = o[:, :s]
+
+    o = o + p["D"].astype(o.dtype)[None, None, :, None] \
+        * xs.reshape(b, s, nh, cfg.ssm_head_dim)
+    o = o.reshape(b, s, di)
+    o = rms_norm(o * jax.nn.silu(z), p["norm_scale"], cfg.norm_eps)
+    y = jnp.einsum("bse,ed->bsd", o, p["wo"].astype(x.dtype))
+    return y, (conv_carry, state)
+
+
+def mamba2_step(cfg, p, x, carry):
+    """Single-token decode. x (B,1,d)."""
+    b, _, d = x.shape
+    di = cfg.ssm_expand * d
+    nh = di // cfg.ssm_head_dim
+    conv_carry, state = carry
+    z, xs, bmat, cmat, dt_raw = _proj(cfg, p, x)
+    xs, conv_carry = _causal_conv(xs, p["conv_w"], p["conv_b"], conv_carry)
+    xs = jax.nn.silu(xs)
+    q, k, v, log_decay, _ = _ssm_inputs(cfg, p, xs, bmat, cmat, dt_raw)
+    o, state = step_gla(q, k, v, log_decay, None, state)
+    o = o + p["D"].astype(o.dtype)[None, None, :, None] \
+        * xs.reshape(b, 1, nh, cfg.ssm_head_dim)
+    o = o.reshape(b, 1, di)
+    o = rms_norm(o * jax.nn.silu(z), p["norm_scale"], cfg.norm_eps)
+    y = jnp.einsum("bse,ed->bsd", o, p["wo"].astype(x.dtype))
+    return y, (conv_carry, state)
+
+
+def mamba2_state_init(cfg, batch: int, dtype=jnp.float32):
+    di = cfg.ssm_expand * cfg.d_model
+    nh = di // cfg.ssm_head_dim
+    return (jnp.zeros((batch, cfg.ssm_conv - 1, di), dtype),
+            jnp.zeros((batch, nh, cfg.ssm_state, cfg.ssm_head_dim), jnp.float32))

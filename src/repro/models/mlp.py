@@ -1,0 +1,66 @@
+"""Dense MLP blocks: gated (SwiGLU/GeGLU) and RWKV channel-mix."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import activate
+from repro.sharding.rules import ParamSpec
+
+
+def mlp_specs(cfg, stacked: tuple[int, ...] = ()) -> dict:
+    d, ff = cfg.d_model, cfg.d_ff
+    pre = tuple("layers" for _ in stacked)
+    return {
+        "wi": ParamSpec(stacked + (d, ff), pre + ("d_model", "d_ff")),
+        "wg": ParamSpec(stacked + (d, ff), pre + ("d_model", "d_ff")),
+        "wo": ParamSpec(stacked + (ff, d), pre + ("d_ff", "d_model")),
+    }
+
+
+def mlp(cfg, p, x):
+    """Gated MLP: act(x @ wg) * (x @ wi) @ wo."""
+    dt = x.dtype
+    g = activate(cfg.act, jnp.einsum("bsd,df->bsf", x, p["wg"].astype(dt)))
+    h = jnp.einsum("bsd,df->bsf", x, p["wi"].astype(dt))
+    return jnp.einsum("bsf,fd->bsd", g * h, p["wo"].astype(dt))
+
+
+# ---------------------------------------------------------------------------
+# RWKV channel mix (Finch): token-shift lerp + squared-relu FFN
+
+
+def rwkv_cmix_specs(cfg, stacked: tuple[int, ...] = ()) -> dict:
+    d, ff = cfg.d_model, cfg.d_ff
+    pre = tuple("layers" for _ in stacked)
+    return {
+        "mu_k": ParamSpec(stacked + (d,), pre + ("d_model",), init="ones", scale=0.5),
+        "mu_r": ParamSpec(stacked + (d,), pre + ("d_model",), init="ones", scale=0.5),
+        "wk": ParamSpec(stacked + (d, ff), pre + ("d_model", "d_ff")),
+        "wv": ParamSpec(stacked + (ff, d), pre + ("d_ff", "d_model")),
+        "wr": ParamSpec(stacked + (d, d), pre + ("d_model", "d_model")),
+    }
+
+
+def _token_shift(x, x_last=None):
+    """x_{t-1} along seq; first position sees x_last (decode carry) or 0."""
+    prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    if x_last is not None:
+        prev = prev.at[:, 0].set(x_last)
+    return prev
+
+
+def rwkv_cmix(cfg, p, x, x_last=None):
+    """Returns (y, new_x_last) — new_x_last is the carry for decode."""
+    dt = x.dtype
+    prev = _token_shift(x, x_last)
+    mu_k = p["mu_k"].astype(dt)
+    mu_r = p["mu_r"].astype(dt)
+    xk = x * mu_k + prev * (1 - mu_k)
+    xr = x * mu_r + prev * (1 - mu_r)
+    k = jnp.einsum("bsd,df->bsf", xk, p["wk"].astype(dt))
+    k = jnp.square(jax.nn.relu(k))
+    kv = jnp.einsum("bsf,fd->bsd", k, p["wv"].astype(dt))
+    r = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, p["wr"].astype(dt)))
+    return r * kv, x[:, -1]

@@ -1,0 +1,195 @@
+"""Mixture-of-Experts: top-k routing with capacity-bounded GShard dispatch.
+
+Two implementations, selected by ``cfg.moe_impl``:
+
+  * ``tp``  (default, robust lowering): experts replicated across the data
+    axis, each expert's d_ff sharded over ``model`` — communication is the
+    same all-reduce pattern as a dense TP MLP, and dispatch never crosses
+    devices (token groups align with the batch sharding).
+  * ``ep``  (expert-parallel): experts sharded over ``model`` with a
+    shard_map all_to_all dispatch/return. Implemented as the §Perf
+    hillclimb alternative for collective-bound MoE cells — see
+    EXPERIMENTS.md; same math, different layout.
+
+FLOP honesty: the dispatch einsums are O(tokens * E*C * d) on top of the
+O(tokens * k * 3*d_ff*d) expert GEMMs, with E*C = capacity_factor * k *
+group tokens — a few percent overhead that shows up (correctly) in the
+MODEL_FLOPS / HLO_FLOPs ratio rather than being hidden.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import activate
+from repro.sharding.rules import ParamSpec, constrain
+
+
+def moe_specs(cfg, stacked: tuple[int, ...] = ()) -> dict:
+    d, ff, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    pre = tuple("layers" for _ in stacked)
+    out = {
+        "router": ParamSpec(stacked + (d, e), pre + ("d_model", "experts")),
+        "wi": ParamSpec(stacked + (e, d, ff), pre + ("experts", "d_model", "d_ff")),
+        "wg": ParamSpec(stacked + (e, d, ff), pre + ("experts", "d_model", "d_ff")),
+        "wo": ParamSpec(stacked + (e, ff, d), pre + ("experts", "d_ff", "d_model")),
+    }
+    if cfg.shared_expert:
+        out["shared_wi"] = ParamSpec(stacked + (d, ff), pre + ("d_model", "d_ff"))
+        out["shared_wg"] = ParamSpec(stacked + (d, ff), pre + ("d_model", "d_ff"))
+        out["shared_wo"] = ParamSpec(stacked + (ff, d), pre + ("d_ff", "d_model"))
+    return out
+
+
+def _route(cfg, p, x_flat):
+    """x (N, d) -> (weights (N, k), idx (N, k)) with renormalized softmax."""
+    logits = jnp.einsum("nd,de->ne", x_flat.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    weights, idx = jax.lax.top_k(probs, cfg.num_experts_per_tok)
+    weights = weights / jnp.maximum(weights.sum(-1, keepdims=True), 1e-9)
+    return weights, idx
+
+
+def _dispatch_tensors(cfg, weights, idx, n_tokens):
+    """GShard capacity dispatch for one group. Returns (dispatch, combine).
+
+    dispatch: (N, E, C) one-hot-ish bf16; combine = dispatch * gate weight.
+    Tokens over an expert's capacity are dropped (standard GShard; the
+    capacity_factor knob trades drop rate vs dispatch memory).
+    """
+    e = cfg.num_experts
+    k = cfg.num_experts_per_tok
+    cap = int(cfg.capacity_factor * k * n_tokens / e)
+    cap = max(cap, 1)
+
+    counts = jnp.zeros((e,), jnp.int32)
+    dispatch = jnp.zeros((n_tokens, e, cap), jnp.bfloat16)
+    combine = jnp.zeros((n_tokens, e, cap), jnp.float32)
+    for j in range(k):  # k <= 2 for all assigned archs
+        mask_j = jax.nn.one_hot(idx[:, j], e, dtype=jnp.int32)      # (N, E)
+        pos_j = jnp.cumsum(mask_j, axis=0) - 1 + counts[None, :]    # (N, E)
+        counts = counts + mask_j.sum(axis=0)
+        keep = (pos_j < cap) & (mask_j > 0)                         # (N, E)
+        oh = jax.nn.one_hot(jnp.clip(pos_j, 0, cap - 1), cap,
+                            dtype=jnp.bfloat16)                     # (N, E, C)
+        oh = oh * keep[..., None].astype(jnp.bfloat16)
+        dispatch = dispatch + oh
+        combine = combine + oh.astype(jnp.float32) * weights[:, j, None, None]
+    return dispatch, combine
+
+
+def _expert_ffn(cfg, p, xe):
+    """xe (E, C, d) -> (E, C, d) through per-expert gated MLPs.
+
+    With ``moe_force_weight_gather`` the bf16 weights are explicitly
+    constrained to drop their FSDP (d_model over 'data') sharding before
+    the einsum: one ~per-layer weight all-gather replaces the partitioner's
+    default plan of partial-summing (E, C, d_ff)-sized activations over
+    'data' — the dominant collective in the mixtral train baseline
+    (EXPERIMENTS.md §Perf).
+    """
+    dt = xe.dtype
+
+    def wcast(w, axes_sharded, axes_full):
+        w = w.astype(dt)
+        if cfg.moe_force_weight_gather:
+            # pin the bf16 cast BEFORE the gather (halves gather bytes),
+            # then gather the bf16 copy over 'data'
+            w = constrain(w, axes_sharded)
+            w = constrain(w, axes_full)
+        return w
+
+    wi = wcast(p["wi"], ("experts", "d_model", "d_ff"), ("experts", None, "d_ff"))
+    wg = wcast(p["wg"], ("experts", "d_model", "d_ff"), ("experts", None, "d_ff"))
+    wo = wcast(p["wo"], ("experts", "d_ff", "d_model"), ("experts", "d_ff", None))
+    g = activate(cfg.act, jnp.einsum("ecd,edf->ecf", xe, wg))
+    h = jnp.einsum("ecd,edf->ecf", xe, wi)
+    return jnp.einsum("ecf,efd->ecd", g * h, wo)
+
+
+def moe_tp(cfg, p, x):
+    """Tensor-parallel MoE over x (B, S, d)."""
+    b, s, d = x.shape
+    gs = min(cfg.moe_group_size, s)
+    n_groups = (b * s) // gs
+    x_flat = x.reshape(n_groups, gs, d)
+
+    def per_group(xg):
+        w, idx = _route(cfg, p, xg)
+        dispatch, combine = _dispatch_tensors(cfg, w, idx, gs)
+        xe = jnp.einsum("nec,nd->ecd", dispatch, xg.astype(jnp.bfloat16))
+        ye = _expert_ffn(cfg, p, xe.astype(x.dtype))
+        return jnp.einsum("nec,ecd->nd", combine.astype(x.dtype), ye)
+
+    y = jax.vmap(per_group)(x_flat).reshape(b, s, d)
+    if cfg.shared_expert:
+        dt = x.dtype
+        g = activate(cfg.act, jnp.einsum("bsd,df->bsf", x, p["shared_wg"].astype(dt)))
+        h = jnp.einsum("bsd,df->bsf", x, p["shared_wi"].astype(dt))
+        y = y + jnp.einsum("bsf,fd->bsd", g * h, p["shared_wo"].astype(dt))
+    return y
+
+
+def moe_ep(cfg, p, x, *, axis_name="model"):
+    """Expert-parallel MoE: experts sharded over ``axis_name``; tokens are
+    exchanged with a single all_to_all pair instead of activating every
+    expert's weights through FSDP all-gathers.
+
+    Must be called inside shard_map with experts sharded on ``axis_name``
+    (p["wi"] local shape (E/D, d, ff)) and tokens sharded on batch axes.
+    """
+    b, s, d = x.shape
+    dcount = jax.lax.axis_size(axis_name)
+    e_local = p["wi"].shape[0]
+    e = e_local * dcount
+    n = b * s
+    x_flat = x.reshape(n, d)
+
+    w, idx = _route_global(cfg, p, x_flat, axis_name)
+    cap = max(int(cfg.capacity_factor * cfg.num_experts_per_tok * n / e), 1)
+    dispatch, combine = _dispatch_tensors_sized(cfg, w, idx, n, e, cap)
+
+    # Local buffers per expert (experts in global expert-major order), then
+    # one a2a pair: tokens travel to their expert's owner and back.
+    xe = jnp.einsum("nec,nd->ecd", dispatch, x_flat.astype(jnp.bfloat16))
+    xe = xe.reshape(dcount, e_local, cap, d)
+    # tiled=False swaps dim 0 with the mesh axis: afterwards dim 0 indexes
+    # the SOURCE device, and this device holds only its own e_local experts.
+    xe = jax.lax.all_to_all(xe, axis_name, split_axis=0, concat_axis=0)
+    xe = xe.transpose(1, 0, 2, 3).reshape(e_local, dcount * cap, d)
+    ye = _expert_ffn(cfg, p, xe.astype(x.dtype))
+    ye = ye.reshape(e_local, dcount, cap, d).transpose(1, 0, 2, 3)
+    ye = jax.lax.all_to_all(ye.astype(jnp.bfloat16), axis_name,
+                            split_axis=0, concat_axis=0)
+    ye = ye.reshape(e, cap, d)
+    y = jnp.einsum("nec,ecd->nd", combine.astype(x.dtype), ye.astype(x.dtype))
+    y = y.reshape(b, s, d)
+    if cfg.shared_expert:
+        dt = x.dtype
+        g = activate(cfg.act, jnp.einsum("bsd,df->bsf", x, p["shared_wg"].astype(dt)))
+        h = jnp.einsum("bsd,df->bsf", x, p["shared_wi"].astype(dt))
+        y = y + jnp.einsum("bsf,fd->bsd", g * h, p["shared_wo"].astype(dt))
+    return y
+
+
+def _route_global(cfg, p, x_flat, axis_name):
+    """Routing against the full router table (router is replicated)."""
+    return _route(cfg, p, x_flat)
+
+
+def _dispatch_tensors_sized(cfg, weights, idx, n_tokens, e, cap):
+    counts = jnp.zeros((e,), jnp.int32)
+    dispatch = jnp.zeros((n_tokens, e, cap), jnp.bfloat16)
+    combine = jnp.zeros((n_tokens, e, cap), jnp.float32)
+    for j in range(cfg.num_experts_per_tok):
+        mask_j = jax.nn.one_hot(idx[:, j], e, dtype=jnp.int32)
+        pos_j = jnp.cumsum(mask_j, axis=0) - 1 + counts[None, :]
+        counts = counts + mask_j.sum(axis=0)
+        keep = (pos_j < cap) & (mask_j > 0)
+        oh = jax.nn.one_hot(jnp.clip(pos_j, 0, cap - 1), cap, dtype=jnp.bfloat16)
+        oh = oh * keep[..., None].astype(jnp.bfloat16)
+        dispatch = dispatch + oh
+        combine = combine + oh.astype(jnp.float32) * weights[:, j, None, None]
+    return dispatch, combine

@@ -1,0 +1,121 @@
+"""RWKV6 "Finch" time-mix block (arXiv:2404.05892).
+
+Implements the signature Finch feature exactly — *data-dependent decay*
+w_t = exp(-exp(base + LoRA(x_shift))) feeding the chunked linear-attention
+core — plus token-shift lerps, per-head bonus u, grouped output norm and
+output gating. Simplification vs the released model: the r/k/v/g token-shift
+mixes are static learned lerps (Finch additionally LoRA-modulates them);
+the decay path, which defines the architecture family, is full fidelity.
+
+Because the decay is data-dependent, the recurrence is NOT a convolution
+and the paper's FFT technique cannot apply (DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.linear_attn import chunked_gla, step_gla
+from repro.models.mlp import _token_shift
+from repro.sharding.rules import ParamSpec
+
+DECAY_LORA = 64
+
+
+def rwkv_tmix_specs(cfg, stacked: tuple[int, ...] = ()) -> dict:
+    d = cfg.d_model
+    h = cfg.num_heads
+    dk = d // h
+    pre = tuple("layers" for _ in stacked)
+
+    def mat(shape, axes, **kw):
+        return ParamSpec(stacked + shape, pre + axes, **kw)
+
+    return {
+        "mu_r": mat((d,), ("d_model",), init="ones", scale=0.5),
+        "mu_k": mat((d,), ("d_model",), init="ones", scale=0.5),
+        "mu_v": mat((d,), ("d_model",), init="ones", scale=0.5),
+        "mu_g": mat((d,), ("d_model",), init="ones", scale=0.5),
+        "mu_w": mat((d,), ("d_model",), init="ones", scale=0.5),
+        "wr": mat((d, h, dk), ("d_model", "heads", "head_dim")),
+        "wk": mat((d, h, dk), ("d_model", "heads", "head_dim")),
+        "wv": mat((d, h, dk), ("d_model", "heads", "head_dim")),
+        "wg": mat((d, d), ("d_model", "d_model")),
+        "wo": mat((h, dk, d), ("heads", "head_dim", "d_model")),
+        "w_base": mat((h, dk), ("heads", "head_dim"), init="zeros"),
+        "w_lora_a": mat((d, DECAY_LORA), ("d_model", None)),
+        "w_lora_b": mat((DECAY_LORA, h, dk), (None, "heads", "head_dim"),
+                        init="zeros"),
+        "u": mat((h, dk), ("heads", "head_dim"), init="zeros"),
+        "ln_scale": mat((h, dk), ("heads", "head_dim"), init="ones"),
+        "ln_bias": mat((h, dk), ("heads", "head_dim"), init="zeros"),
+    }
+
+
+def _head_groupnorm(o, scale, bias, eps=64e-5):
+    """RWKV GroupNorm(H): normalize each head's dk channels."""
+    f = o.astype(jnp.float32)
+    mu = f.mean(-1, keepdims=True)
+    var = ((f - mu) ** 2).mean(-1, keepdims=True)
+    y = (f - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(o.dtype)
+
+
+def _mix_proj(cfg, p, x, prev):
+    dt = x.dtype
+
+    def lerp(mu):
+        m = p[mu].astype(dt)
+        return x * m + prev * (1 - m)
+
+    r = jnp.einsum("bsd,dhk->bshk", lerp("mu_r"), p["wr"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", lerp("mu_k"), p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", lerp("mu_v"), p["wv"].astype(dt))
+    g = jax.nn.silu(jnp.einsum("bsd,de->bse", lerp("mu_g"), p["wg"].astype(dt)))
+    # data-dependent decay: logw = -exp(base + lora(x_w)), always < 0
+    lora = jnp.einsum("bsd,dr->bsr", lerp("mu_w"), p["w_lora_a"].astype(dt))
+    lora = jnp.einsum("bsr,rhk->bshk", jnp.tanh(lora), p["w_lora_b"].astype(dt))
+    logw = -jnp.exp(p["w_base"].astype(jnp.float32) + lora.astype(jnp.float32))
+    return r, k, v, g, logw
+
+
+def rwkv_tmix(cfg, p, x, carry=None):
+    """x (B,S,d) -> (y, new_carry). carry = (x_last (B,d), state (B,H,dk,dk))."""
+    b, s, d = x.shape
+    h = cfg.num_heads
+    dk = d // h
+    x_last, state = carry if carry is not None else (None, None)
+    prev = _token_shift(x, x_last)
+    r, k, v, g, logw = _mix_proj(cfg, p, x, prev)
+
+    pad = (-s) % 16
+    if pad:  # chunk alignment
+        r, k, v = (jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                   for a in (r, k, v))
+        logw = jnp.pad(logw, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    o, state = chunked_gla(r, k, v, logw, u=p["u"], initial_state=state)
+    o = o[:, :s]
+
+    o = _head_groupnorm(o, p["ln_scale"], p["ln_bias"])
+    y = jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(x.dtype))
+    y = y * g.astype(y.dtype)
+    return y, (x[:, -1], state)
+
+
+def rwkv_tmix_step(cfg, p, x, carry):
+    """Single-token decode. x (B,1,d); carry as in rwkv_tmix."""
+    x_last, state = carry
+    prev = x_last[:, None] if x_last is not None else jnp.zeros_like(x)
+    r, k, v, g, logw = _mix_proj(cfg, p, x, prev)
+    o, state = step_gla(r, k, v, logw, p["u"], state)
+    o = _head_groupnorm(o, p["ln_scale"], p["ln_bias"])
+    y = jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(x.dtype))
+    return y * g.astype(y.dtype), (x[:, 0], state)
+
+
+def rwkv_state_init(cfg, batch: int, dtype=jnp.float32):
+    h = cfg.num_heads
+    dk = cfg.d_model // h
+    return (jnp.zeros((batch, cfg.d_model), dtype),
+            jnp.zeros((batch, h, dk, dk), jnp.float32))

@@ -1,0 +1,51 @@
+"""Scan/unroll switch for cost-accurate dry-run lowering.
+
+XLA's HloCostAnalysis counts a while-loop body ONCE regardless of trip
+count (verified in tests/test_roofline.py::test_cost_analysis_scan_gap), so
+flops/bytes/collective counts lowered through lax.scan would be understated
+by the trip count. The dry-run therefore lowers each cell twice:
+
+  * scanned   (UNROLL=False, production form) -> memory_analysis + the
+    compile-succeeds proof; buffer assignment handles loops correctly;
+  * unrolled  (UNROLL=True) at reduced depths -> cost_analysis +
+    collective bytes, extrapolated per-period (launch/dryrun.py).
+
+Model code routes every scan through maybe_scan() so one flag flips the
+whole stack.
+
+Two unroll scopes exist because the two cost metrics need different forms:
+  * mode "all":    every scan unrolled. flops + collective bytes are EXACT
+    (slices cost no flops; collectives aren't fused). `bytes accessed` is
+    an UPPER bound: fusions subsume slices of full tensors, so each inner
+    iteration can get charged the whole sliced operand.
+  * mode "layers": only the layer/period scans unrolled; inner scans
+    (attention kv tiles, GLA chunks, loss chunks) stay rolled and are
+    counted once -> `bytes accessed` is a LOWER bound on memory traffic.
+The roofline reports memory as [lb, ub] (benchmarks/roofline.py).
+"""
+
+from __future__ import annotations
+
+import jax
+
+_MODE = "none"  # none | layers | all
+
+
+def set_unroll(mode) -> None:
+    """set_unroll(True/False) (back-compat) or 'none'|'layers'|'all'."""
+    global _MODE
+    if mode is True:
+        mode = "all"
+    elif mode is False:
+        mode = "none"
+    assert mode in ("none", "layers", "all"), mode
+    _MODE = mode
+
+
+def unrolling() -> str:
+    return _MODE
+
+
+def maybe_scan(f, init, xs, length=None, kind="inner"):
+    unroll = (_MODE == "all") or (_MODE == "layers" and kind == "layers")
+    return jax.lax.scan(f, init, xs, length=length, unroll=unroll or 1)

@@ -1,0 +1,497 @@
+"""Model assembly for all 10 assigned architectures.
+
+Layers are stacked *by pattern period* and scanned: a config's
+``layer_pattern`` (e.g. gemma3 "LLLLLG", zamba2 "MMMMMS") becomes one
+lax.scan over ``num_layers // len(pattern)`` periods whose body applies one
+block per pattern position — so the HLO stays O(pattern length) regardless
+of depth (compile-time critical on the 512-device dry-run), heterogeneous
+stacks need no lax.cond (static FLOPs stay honest), and Zamba2's *shared*
+attention block falls out naturally: its params are closed over by the scan
+body (applied every period) while its KV caches are per-period scan xs/ys.
+
+Block kinds: G global attention, L local (SWA) attention, M mamba2,
+R rwkv6, S shared attention (zamba2). Leftover ``num_layers % period``
+layers run unscanned as the tail.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models.common import cross_entropy, norm_apply, norm_specs, sinusoidal_embed
+from repro.models.config import ModelConfig
+from repro.models.mamba2 import mamba2_block, mamba2_specs, mamba2_state_init, mamba2_step
+from repro.models.mlp import mlp, mlp_specs, rwkv_cmix, rwkv_cmix_specs
+from repro.models.moe import moe_specs, moe_tp
+from repro.models.rwkv6 import (rwkv_state_init, rwkv_tmix, rwkv_tmix_specs,
+                                rwkv_tmix_step)
+from repro.models.scanning import maybe_scan
+from repro.sharding.rules import ParamSpec, constrain
+
+
+# ---------------------------------------------------------------------------
+# per-kind specs
+
+
+def _attn_block_specs(cfg, stacked, *, cross=False, shared=False):
+    st = () if shared else stacked
+    out = {
+        "attn": attn.attn_specs(cfg, st),
+        "ln1": norm_specs(cfg, st),
+        "ln2": norm_specs(cfg, st),
+    }
+    if cfg.post_norms:
+        out["post_ln1"] = norm_specs(cfg, st)
+        out["post_ln2"] = norm_specs(cfg, st)
+    if cfg.num_experts and not shared and not cross:
+        out["moe"] = moe_specs(cfg, st)
+    else:
+        out["mlp"] = mlp_specs(cfg, st)
+    if cross:
+        out["cross"] = attn.attn_specs(cfg, st, cross=True)
+        out["ln_cross"] = norm_specs(cfg, st)
+    return out
+
+
+def _block_specs(cfg, kind, stacked, *, cross=False):
+    if kind in "GL":
+        return _attn_block_specs(cfg, stacked, cross=cross)
+    if kind == "M":
+        return {"mamba": mamba2_specs(cfg, stacked), "ln": norm_specs(cfg, stacked)}
+    if kind == "R":
+        return {"tmix": rwkv_tmix_specs(cfg, stacked),
+                "cmix": rwkv_cmix_specs(cfg, stacked),
+                "ln1": norm_specs(cfg, stacked), "ln2": norm_specs(cfg, stacked)}
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# per-kind application (mode: train | prefill | decode)
+
+
+def _kind_window_theta(cfg, kind):
+    if kind == "L":
+        theta = cfg.rope_theta_local or cfg.rope_theta
+        return cfg.sliding_window, theta
+    return None, cfg.rope_theta
+
+
+def _apply_attn_block(cfg, p, h, kind, mode, cache, pos, enc_out=None,
+                      cache_len=None):
+    window, theta = _kind_window_theta(cfg, kind)
+    if cfg.frontend == "audio_frames":
+        theta = None  # whisper: absolute sinusoidal positions, no rope
+    x = norm_apply(cfg, h, p["ln1"])
+    new_cache = {}
+    if mode == "encode":
+        y = attn.self_attention(cfg, p["attn"], x, window=None, theta=theta,
+                                causal=False)
+    elif mode == "decode":
+        y, ck, cv = attn.decode_self_attention(
+            cfg, p["attn"], x, cache["k"], cache["v"], pos,
+            window=window, theta=theta)
+        new_cache = {"k": ck, "v": cv}
+    elif mode == "prefill":
+        y, (k, v) = attn.self_attention(cfg, p["attn"], x, window=window,
+                                        theta=theta, return_kv=True)
+        s = k.shape[1]
+        target = max(cache_len or s, s)
+        if window is not None and target > window:
+            if s > window:
+                # ring-buffer cache: keep the trailing window, rotated so
+                # that slot (pos % window) matches decode's indexing
+                keep = jnp.arange(window) + (s - window)
+                slot = keep % window
+                k = jnp.zeros_like(k[:, :window]).at[:, slot].set(k[:, keep])
+                v = jnp.zeros_like(v[:, :window]).at[:, slot].set(v[:, keep])
+            else:  # slots [0, s) already match pos % window for pos < window
+                pad = ((0, 0), (0, window - s), (0, 0), (0, 0))
+                k, v = jnp.pad(k, pad), jnp.pad(v, pad)
+        elif target > s:  # full cache with decode headroom
+            pad = ((0, 0), (0, target - s), (0, 0), (0, 0))
+            k, v = jnp.pad(k, pad), jnp.pad(v, pad)
+        cdt = cfg.cache_dtype
+        new_cache = {"k": k.astype(cdt), "v": v.astype(cdt)}
+    else:
+        y = attn.self_attention(cfg, p["attn"], x, window=window, theta=theta)
+    if cfg.post_norms:
+        y = norm_apply(cfg, y, p["post_ln1"])
+    h = h + y
+
+    if "cross" in p and enc_out is not None:
+        x = norm_apply(cfg, h, p["ln_cross"])
+        if mode == "decode":
+            y = attn.decode_cross_attention(cfg, p["cross"], x,
+                                            cache["cross_k"], cache["cross_v"])
+            new_cache["cross_k"] = cache["cross_k"]
+            new_cache["cross_v"] = cache["cross_v"]
+        else:
+            ek, ev = attn.encode_kv(cfg, p["cross"], enc_out)
+            y = attn.cross_attention(cfg, p["cross"], x, ek, ev)
+            if mode == "prefill":
+                new_cache["cross_k"] = ek.astype(cfg.cache_dtype)
+                new_cache["cross_v"] = ev.astype(cfg.cache_dtype)
+        h = h + y
+
+    x = norm_apply(cfg, h, p["ln2"])
+    if "moe" in p:
+        y = moe_tp(cfg, p["moe"], x)
+    else:
+        y = mlp(cfg, p["mlp"], x)
+    if cfg.post_norms:
+        y = norm_apply(cfg, y, p["post_ln2"])
+    return h + y, (new_cache or None)
+
+
+def _apply_block(cfg, kind, p, h, mode, cache, pos, enc_out=None,
+                 cache_len=None):
+    if kind in "GLS":
+        k = "G" if kind == "S" else kind
+        return _apply_attn_block(cfg, p, h, k, mode, cache, pos, enc_out,
+                                 cache_len)
+    if kind == "M":
+        x = norm_apply(cfg, h, p["ln"])
+        if mode == "decode":
+            y, carry = mamba2_step(cfg, p["mamba"], x, cache)
+        else:
+            y, carry = mamba2_block(cfg, p["mamba"], x, None if mode == "train"
+                                    else cache)
+        return h + y, (carry if mode != "train" else None)
+    if kind == "R":
+        x = norm_apply(cfg, h, p["ln1"])
+        tmix_carry = cache[0] if cache is not None else None
+        if mode == "decode":
+            y, tcarry = rwkv_tmix_step(cfg, p["tmix"], x, tmix_carry)
+        else:
+            y, tcarry = rwkv_tmix(cfg, p["tmix"], x, tmix_carry)
+        h = h + y
+        x = norm_apply(cfg, h, p["ln2"])
+        if mode == "decode":
+            prev = cache[1][:, None].astype(x.dtype)
+            dt = x.dtype
+            mu_k = p["cmix"]["mu_k"].astype(dt)
+            mu_r = p["cmix"]["mu_r"].astype(dt)
+            xk = x * mu_k + prev * (1 - mu_k)
+            xr = x * mu_r + prev * (1 - mu_r)
+            kk = jnp.square(jax.nn.relu(
+                jnp.einsum("bsd,df->bsf", xk, p["cmix"]["wk"].astype(dt))))
+            kv = jnp.einsum("bsf,fd->bsd", kk, p["cmix"]["wv"].astype(dt))
+            r = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr,
+                                          p["cmix"]["wr"].astype(dt)))
+            y, ccarry = r * kv, x[:, 0]
+        else:
+            y, ccarry = rwkv_cmix(cfg, p["cmix"], x)
+        h = h + y
+        return h, ((tcarry, ccarry) if mode != "train" else None)
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# cache initialization
+
+
+def _block_cache_init(cfg, kind, batch, cache_len, *, cross=False):
+    kv, hd = cfg.num_kv_heads, cfg.head_dim
+    if kind in "GLS":
+        window, _ = _kind_window_theta(cfg, "L" if kind == "L" else "G")
+        s = min(cache_len, window) if (kind == "L" and window) else cache_len
+        cdt = cfg.cache_dtype
+        c = {"k": jnp.zeros((batch, s, kv, hd), cdt),
+             "v": jnp.zeros((batch, s, kv, hd), cdt)}
+        if cross:
+            c["cross_k"] = jnp.zeros((batch, cfg.cross_len, kv, hd), cdt)
+            c["cross_v"] = jnp.zeros((batch, cfg.cross_len, kv, hd), cdt)
+        return c
+    if kind == "M":
+        return mamba2_state_init(cfg, batch, jnp.bfloat16)
+    if kind == "R":
+        return (rwkv_state_init(cfg, batch, jnp.bfloat16),
+                jnp.zeros((batch, cfg.d_model), jnp.bfloat16))
+    raise ValueError(kind)
+
+
+def _block_cache_axes(cfg, kind, *, cross=False, stacked=False):
+    """Logical sharding axes mirroring _block_cache_init's structure."""
+    pre = ("layers",) if stacked else ()
+    kv_axes = pre + ("cache_batch", "cache_seq", "cache_heads",
+                     "cache_head_dim")
+    if kind in "GLS":
+        c = {"k": kv_axes, "v": kv_axes}
+        if cross:
+            c["cross_k"] = kv_axes
+            c["cross_v"] = kv_axes
+        return c
+    if kind == "M":
+        return (pre + ("cache_batch", None, "d_ff"),
+                pre + ("cache_batch", "ssm_heads", "ssm_state", None))
+    if kind == "R":
+        return ((pre + ("cache_batch", "d_model"),
+                 pre + ("cache_batch", "cache_heads", None, None)),
+                pre + ("cache_batch", "d_model"))
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+
+
+class TransformerLM:
+    """Decoder-only (optionally enc-dec / prefix-LM) language model."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # -------------------------- specs --------------------------------
+    def param_specs(self):
+        cfg = self.cfg
+        full, tail = cfg.pattern_groups()
+        pat = cfg.layer_pattern
+        cross = cfg.encoder_layers > 0
+        specs = {
+            "embed": ParamSpec((cfg.vocab_size, cfg.d_model),
+                               ("vocab", "d_model")),
+            "final_norm": norm_specs(cfg),
+            "blocks": {str(j): _block_specs(cfg, k, (full,), cross=cross)
+                       for j, k in enumerate(pat) if k != "S" and full > 0},
+            "tail": {str(i): _block_specs(cfg, pat[i], (), cross=cross)
+                     for i in range(tail)},
+        }
+        if "S" in pat:
+            specs["shared"] = _attn_block_specs(cfg, (), shared=True)
+        if not cfg.tie_embeddings:
+            specs["lm_head"] = ParamSpec((cfg.d_model, cfg.vocab_size),
+                                         ("d_model", "vocab"))
+        if cfg.encoder_layers:
+            specs["encoder"] = {
+                "blocks": _attn_block_specs(cfg, (cfg.encoder_layers,)),
+                "final_norm": norm_specs(cfg),
+            }
+        return specs
+
+    # -------------------------- stacks -------------------------------
+    def _run_stack(self, params, h, mode, caches, pos, enc_out=None,
+                   cache_len=None):
+        cfg = self.cfg
+        full, tail = cfg.pattern_groups()
+        pat = cfg.layer_pattern
+        shared = params.get("shared")
+        new_caches = {"blocks": None, "tail": {}}
+
+        if full > 0:
+            def period(h, xs):
+                blk_params, blk_caches = xs
+                outs = []
+                for j, kind in enumerate(pat):
+                    p_j = shared if kind == "S" else blk_params[str(j)]
+                    c_j = None if blk_caches is None else blk_caches[str(j)]
+                    h, nc = _apply_block(cfg, kind, p_j, h, mode, c_j, pos,
+                                         enc_out, cache_len)
+                    outs.append(nc)
+                ys = ({str(j): outs[j] for j in range(len(pat))}
+                      if mode != "train" else None)
+                return h, ys
+
+            if cfg.remat == "full":
+                period = jax.checkpoint(period)
+            blk_caches = caches["blocks"] if caches else None
+            xs = (params["blocks"], blk_caches)
+            h, ys = maybe_scan(period, h, xs, kind="layers")
+            new_caches["blocks"] = ys
+
+        for i in range(tail):
+            kind = pat[i]
+            p_i = shared if kind == "S" else params["tail"][str(i)]
+            c_i = None if caches is None else caches["tail"][str(i)]
+            h, nc = _apply_block(cfg, kind, p_i, h, mode, c_i, pos, enc_out,
+                                 cache_len)
+            new_caches["tail"][str(i)] = nc
+        return h, (new_caches if mode != "train" else None)
+
+    def _encode(self, params, frames):
+        """Whisper encoder over stub frame embeddings (B, Se, d)."""
+        cfg = self.cfg
+        h = frames + jnp.asarray(sinusoidal_embed(frames.shape[1], cfg.d_model),
+                                 frames.dtype)
+
+        def layer(h, p):
+            h, _ = _apply_attn_block(cfg, p, h, "G", "encode", None, 0)
+            return h, None
+
+        if cfg.remat == "full":
+            layer = jax.checkpoint(layer)
+        h, _ = maybe_scan(layer, h, params["encoder"]["blocks"],
+                          kind="layers")
+        return norm_apply(cfg, h, params["encoder"]["final_norm"])
+
+    # -------------------------- embedding / head ---------------------
+    def _embed(self, params, tokens, offset=0):
+        cfg = self.cfg
+        h = jnp.take(params["embed"], tokens, axis=0).astype(cfg.dtype)
+        if cfg.embed_scale:
+            h = h * math.sqrt(cfg.d_model)
+        if cfg.frontend == "audio_frames":  # decoder absolute positions
+            table = sinusoidal_embed(offset + tokens.shape[1], cfg.d_model)
+            h = h + jnp.asarray(table[offset:], h.dtype)
+        return constrain(h, ("batch", "seq", None))
+
+    def _logits(self, params, h):
+        cfg = self.cfg
+        h = norm_apply(cfg, h, params["final_norm"])
+        w = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+        logits = jnp.einsum("bsd,dv->bsv", h, w.astype(h.dtype))
+        # keep vocab sharded over 'model': without this, propagation
+        # replicates (B,S,V) logits -> ~16x activation blowup (DESIGN §Perf)
+        return constrain(logits.astype(jnp.float32),
+                         ("batch", None, "act_vocab"))
+
+    # -------------------------- public API ---------------------------
+    def forward(self, params, batch):
+        """Training forward -> logits. batch: tokens (B,S) [+frames/patches]."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        enc_out = None
+        if cfg.encoder_layers:
+            enc_out = self._encode(params, batch["frames"].astype(cfg.dtype))
+        h = self._embed(params, tokens)
+        if cfg.num_prefix_embeds:
+            h = jnp.concatenate(
+                [batch["patches"].astype(h.dtype), h], axis=1)
+        h, _ = self._run_stack(params, h, "train", None, 0, enc_out)
+        return self._logits(params, h)
+
+    def loss(self, params, batch):
+        """Mean next-token NLL with a SEQ-CHUNKED head: the (B, S, V) logits
+        tensor is never materialized — each chunk's logits are (re)computed
+        inside a checkpointed scan body, flash-style. For the 151k-262k
+        vocab configs this removes the single largest training activation
+        (e.g. gemma3 train_4k: 2 x 4.3 GiB/device of fp32 logits+grad).
+        """
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        enc_out = None
+        if cfg.encoder_layers:
+            enc_out = self._encode(params, batch["frames"].astype(cfg.dtype))
+        h = self._embed(params, tokens)
+        if cfg.num_prefix_embeds:
+            h = jnp.concatenate([batch["patches"].astype(h.dtype), h], axis=1)
+        h, _ = self._run_stack(params, h, "train", None, 0, enc_out)
+        if cfg.num_prefix_embeds:
+            h = h[:, cfg.num_prefix_embeds:]
+
+        h = norm_apply(cfg, h, params["final_norm"])[:, :-1]
+        labels = tokens[:, 1:]
+        mask = batch.get("loss_mask")
+        mask = (jnp.ones(labels.shape, jnp.float32) if mask is None
+                else mask[:, 1:].astype(jnp.float32))
+        w = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+
+        b, s1, d = h.shape
+        chunk = min(cfg.loss_chunk, s1)
+        pad = (-s1) % chunk
+        if pad:
+            h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+            labels = jnp.pad(labels, ((0, 0), (0, pad)))
+            mask = jnp.pad(mask, ((0, 0), (0, pad)))
+        n = h.shape[1] // chunk
+        hs = h.reshape(b, n, chunk, d).swapaxes(0, 1)
+        ls = labels.reshape(b, n, chunk).swapaxes(0, 1)
+        ms = mask.reshape(b, n, chunk).swapaxes(0, 1)
+
+        def body(acc, xs):
+            hc, lc, mc = xs
+            logits = jnp.einsum("bsd,dv->bsv", hc, w.astype(hc.dtype))
+            logits = constrain(logits.astype(jnp.float32),
+                               ("batch", None, "act_vocab"))
+            lse = jax.nn.logsumexp(logits, axis=-1)
+            gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+            nll = (lse - gold) * mc
+            return (acc[0] + nll.sum(), acc[1] + mc.sum()), None
+
+        (total, count), _ = maybe_scan(jax.checkpoint(body), (0.0, 0.0),
+                                       (hs, ls, ms))
+        return total / jnp.maximum(count, 1.0)
+
+    def init_cache(self, batch, cache_len):
+        cfg = self.cfg
+        full, tail = cfg.pattern_groups()
+        pat = cfg.layer_pattern
+        cross = cfg.encoder_layers > 0
+
+        def stack(tree):
+            return jax.tree.map(
+                lambda x: jnp.broadcast_to(x, (full,) + x.shape), tree)
+
+        caches = {"blocks": None, "tail": {}}
+        if full > 0:
+            caches["blocks"] = {
+                str(j): stack(_block_cache_init(cfg, k, batch, cache_len,
+                                                cross=cross))
+                for j, k in enumerate(pat)}
+        for i in range(tail):
+            caches["tail"][str(i)] = _block_cache_init(cfg, pat[i], batch,
+                                                       cache_len, cross=cross)
+        return caches
+
+    def cache_axes(self):
+        """Logical sharding axes tree parallel to init_cache()'s structure."""
+        cfg = self.cfg
+        full, tail = cfg.pattern_groups()
+        pat = cfg.layer_pattern
+        cross = cfg.encoder_layers > 0
+        axes = {"blocks": None, "tail": {}}
+        if full > 0:
+            axes["blocks"] = {
+                str(j): _block_cache_axes(cfg, k, cross=cross, stacked=True)
+                for j, k in enumerate(pat)}
+        for i in range(tail):
+            axes["tail"][str(i)] = _block_cache_axes(cfg, pat[i], cross=cross)
+        return axes
+
+    def prefill(self, params, batch, cache_len=None):
+        """Full-context forward building decode caches.
+
+        ``cache_len``: total cache size including decode headroom (defaults
+        to the prompt length). Returns (last-position logits, caches).
+        """
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        enc_out = None
+        if cfg.encoder_layers:
+            enc_out = self._encode(params, batch["frames"].astype(cfg.dtype))
+        h = self._embed(params, tokens)
+        if cfg.num_prefix_embeds:
+            h = jnp.concatenate([batch["patches"].astype(h.dtype), h], axis=1)
+        h, caches = self._run_stack(params, h, "prefill", None, 0, enc_out,
+                                    cache_len=cache_len)
+        return self._logits(params, h[:, -1:]), caches
+
+    def decode_step(self, params, caches, token, pos):
+        """One token. token (B,1) int32; pos scalar int32 (same across batch).
+
+        Returns (logits (B,1,V), new caches).
+        """
+        cfg = self.cfg
+        h = jnp.take(params["embed"], token, axis=0).astype(cfg.dtype)
+        if cfg.embed_scale:
+            h = h * math.sqrt(cfg.d_model)
+        if cfg.frontend == "audio_frames":
+            # absolute sinusoidal row at `pos` (table sized by cache length)
+            s_max = _cache_len_of(caches)
+            table = jnp.asarray(sinusoidal_embed(s_max, cfg.d_model), h.dtype)
+            h = h + jax.lax.dynamic_slice_in_dim(table, pos, 1, axis=0)[None]
+        h, caches = self._run_stack(params, h, "decode", caches, pos, 1)
+        return self._logits(params, h), caches
+
+
+def _cache_len_of(caches):
+    """Static self-attention cache length from any attention cache leaf."""
+    for grp in (caches.get("blocks") or {}), caches.get("tail", {}):
+        for c in grp.values():
+            if isinstance(c, dict) and "k" in c:
+                k = c["k"]
+                return k.shape[-3] if k.ndim == 4 else k.shape[-3]
+    raise ValueError("no attention cache found")

@@ -1,0 +1,8 @@
+from repro.optim.optimizers import (Optimizer, adamw, adafactor, sgd,
+                                    clip_by_global_norm)
+from repro.optim.schedules import cosine_schedule, linear_warmup_cosine
+from repro.optim.compression import compress_int8, decompress_int8
+
+__all__ = ["Optimizer", "adamw", "adafactor", "sgd", "clip_by_global_norm",
+           "cosine_schedule", "linear_warmup_cosine", "compress_int8",
+           "decompress_int8"]

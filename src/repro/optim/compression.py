@@ -1,0 +1,52 @@
+"""Error-feedback int8 gradient compression for the DP all-reduce.
+
+Distributed-optimization trick (DESIGN.md §7): before the data-parallel
+all-reduce, each gradient leaf is quantized to int8 with a per-leaf scale;
+the quantization residual is kept locally and added back into the next
+step's gradient (error feedback — Karimireddy et al. 2019 — which keeps
+SGD-style convergence despite biased quantization). Cuts DP all-reduce
+bytes 4x vs f32 / 2x vs bf16.
+
+Used via ``train_step(..., grad_compression=True)``: the psum runs on the
+int8-decoded values (XLA all-reduces the decoded f32; on real hardware the
+int8 payload + custom reduction would use ~1/4 the ICI bytes — the roofline
+collective term in EXPERIMENTS.md §Perf quantifies the modeled saving).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_int8(g, error):
+    """Quantize g + error -> (int8 payload, scale, new_error)."""
+    g = g.astype(jnp.float32) + error
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    decoded = q.astype(jnp.float32) * scale
+    return q, scale, g - decoded
+
+
+def decompress_int8(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def init_error_state(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress_tree(grads, errors):
+    """Apply error-feedback compression leafwise.
+
+    Returns (decoded grads, new errors). The decoded grads are what enters
+    the all-reduce; the errors stay device-local.
+    """
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_e = tdef.flatten_up_to(errors)
+    dec, errs = [], []
+    for g, e in zip(flat_g, flat_e):
+        q, s, ne = compress_int8(g, e)
+        dec.append(decompress_int8(q, s).astype(g.dtype))
+        errs.append(ne)
+    return tdef.unflatten(dec), tdef.unflatten(errs)

@@ -1,0 +1,143 @@
+"""Optimizers (from scratch — no optax in this environment).
+
+All optimizers are pure pytree transforms: ``init(params) -> state`` and
+``update(grads, state, params, lr) -> (new_params, new_state)``. Optimizer
+state inherits the parameter sharding (ZeRO-1 falls out of FSDP'd params:
+the moments are sharded exactly like the params they track).
+
+Adafactor is provided for the very large assigned configs (mixtral-8x22b,
+llama4-scout): factored second moments cut optimizer HBM from 2x to ~0.02x
+of the (already FSDP-sharded) parameter bytes.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable  # (grads, state, params, lr) -> (params, state)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    norm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g * scale).astype(g.dtype), grads), norm
+
+
+# ---------------------------------------------------------------------------
+
+
+def sgd(momentum: float = 0.9, weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        return {"mu": jax.tree.map(jnp.zeros_like, params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr):
+        mu = jax.tree.map(lambda m, g: momentum * m + g, state["mu"], grads)
+        new = jax.tree.map(
+            lambda p, m: p - lr * (m + weight_decay * p), params, mu)
+        return new, {"mu": mu, "step": state["step"] + 1}
+
+    return Optimizer(init, update)
+
+
+def adamw(b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1) -> Optimizer:
+    def init(params):
+        z = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+        return {"mu": z, "nu": jax.tree.map(jnp.copy, z),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr):
+        step = state["step"] + 1
+        c1 = 1.0 - b1 ** step.astype(jnp.float32)
+        c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            mh = m / c1
+            vh = v / c2
+            new_p = p.astype(jnp.float32) - lr * (
+                mh / (jnp.sqrt(vh) + eps) + weight_decay * p.astype(jnp.float32))
+            return new_p.astype(p.dtype), m, v
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_m = tdef.flatten_up_to(state["mu"])
+        flat_v = tdef.flatten_up_to(state["nu"])
+        out = [upd(p, g, m, v) for p, g, m, v
+               in zip(flat_p, flat_g, flat_m, flat_v)]
+        new_p = tdef.unflatten([o[0] for o in out])
+        mu = tdef.unflatten([o[1] for o in out])
+        nu = tdef.unflatten([o[2] for o in out])
+        return new_p, {"mu": mu, "nu": nu, "step": step}
+
+    return Optimizer(init, update)
+
+
+def adafactor(eps: float = 1e-30, clip_threshold: float = 1.0,
+              decay: float = 0.8, weight_decay: float = 0.0) -> Optimizer:
+    """Factored second-moment optimizer (Shazeer & Stern 2018), no momentum.
+
+    >=2D params keep row/col factored statistics over the last two dims;
+    <2D params fall back to full second moments.
+    """
+
+    def init(params):
+        def one(p):
+            if p.ndim >= 2:
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+            return {"v": jnp.zeros_like(p, jnp.float32)}
+        return {"stats": jax.tree.map(one, params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr):
+        step = state["step"] + 1
+        beta = 1.0 - (step.astype(jnp.float32) + 1.0) ** (-decay)
+
+        def one(p, g, s):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps
+            if p.ndim >= 2:
+                vr = beta * s["vr"] + (1 - beta) * g2.mean(axis=-1)
+                vc = beta * s["vc"] + (1 - beta) * g2.mean(axis=-2)
+                denom = vr.mean(axis=-1, keepdims=True)
+                u = g * jax.lax.rsqrt(vr[..., None] / jnp.maximum(denom[..., None], eps))
+                u = u * jax.lax.rsqrt(vc[..., None, :])
+                new_s = {"vr": vr, "vc": vc}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                u = g * jax.lax.rsqrt(v)
+                new_s = {"v": v}
+            rms = jnp.sqrt(jnp.mean(u * u))
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            new_p = p.astype(jnp.float32) - lr * (u + weight_decay * p.astype(jnp.float32))
+            return new_p.astype(p.dtype), new_s
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_s = tdef.flatten_up_to(state["stats"])
+        out = [one(p, g, s) for p, g, s in zip(flat_p, flat_g, flat_s)]
+        new_p = tdef.unflatten([o[0] for o in out])
+        stats = tdef.unflatten([o[1] for o in out])
+        return new_p, {"stats": stats, "step": step}
+
+    return Optimizer(init, update)
+
+
+OPTIMIZERS = {"adamw": adamw, "adafactor": adafactor, "sgd": sgd}
+
+
+def get_optimizer(name: str, **kw) -> Optimizer:
+    return OPTIMIZERS[name](**kw)

@@ -1,0 +1,3 @@
+from repro.serve.engine import ServeEngine, greedy_generate
+
+__all__ = ["ServeEngine", "greedy_generate"]

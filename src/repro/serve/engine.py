@@ -1,0 +1,36 @@
+"""Batched serving: prefill + greedy decode over jit'd step functions."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer import TransformerLM
+
+
+class ServeEngine:
+    def __init__(self, model: TransformerLM):
+        self.model = model
+        self._prefill = jax.jit(model.prefill, static_argnames=("cache_len",))
+        self._decode = jax.jit(model.decode_step, donate_argnums=1)
+
+    def generate(self, params, batch, max_new_tokens: int):
+        """Greedy continuation of batch["tokens"] (B, S)."""
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        p = self.model.cfg.num_prefix_embeds
+        cache_len = p + s + max_new_tokens
+        logits, caches = self._prefill(params, batch, cache_len=cache_len)
+        out = []
+        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(tokens.dtype)
+        out.append(tok)
+        for t in range(max_new_tokens - 1):
+            logits, caches = self._decode(params, caches, tok,
+                                          jnp.int32(p + s + t))
+            tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(tokens.dtype)
+            out.append(tok)
+        return jnp.concatenate(out, axis=1)
+
+
+def greedy_generate(model, params, batch, max_new_tokens: int):
+    return ServeEngine(model).generate(params, batch, max_new_tokens)

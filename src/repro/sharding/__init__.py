@@ -1,0 +1,5 @@
+from repro.sharding.rules import (ParamSpec, ShardingRules, abstract_params,
+                                  init_params, param_shardings, spec_for)
+
+__all__ = ["ParamSpec", "ShardingRules", "abstract_params", "init_params",
+           "param_shardings", "spec_for"]

@@ -1,0 +1,208 @@
+"""Logical-axis sharding rules (MaxText-style), the hillclimb lever.
+
+Every parameter is declared once with *logical* dimension names
+(``ParamSpec``); a ``ShardingRules`` table maps logical names to mesh axes.
+Changing a rule re-shards the whole model without touching model code —
+which is exactly how §Perf iterations flip sharding hypotheses.
+
+Defaults implement:
+  * tensor parallelism over ``model`` for heads / d_ff / vocab / experts;
+  * FSDP (ZeRO-3 style) over ``data`` for the params' d_model dimension —
+    XLA inserts the all-gathers at use sites and reduce-scatters gradients;
+  * batch data-parallel over ``('pod', 'data')``.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    """Shape + logical axis names + initializer for one parameter."""
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]
+    init: str = "normal"          # normal | zeros | ones | scaled
+    scale: float = 1.0
+    dtype: str = "float32"
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+MeshAxes = str | tuple[str, ...] | None
+
+
+@dataclass(frozen=True)
+class ShardingRules:
+    """logical axis name -> mesh axis (or tuple, or None=replicated)."""
+    rules: dict[str, MeshAxes] = field(default_factory=dict)
+
+    @classmethod
+    def default(cls, multi_pod: bool = False) -> "ShardingRules":
+        batch: MeshAxes = ("pod", "data") if multi_pod else ("data",)
+        return cls(rules={
+            # --- activations ---
+            "batch": batch,
+            "seq": None,            # sequence parallelism off by default
+            "act_heads": "model",
+            "act_d_ff": "model",
+            "act_vocab": "model",
+            "cache_batch": batch,
+            "cache_seq": None,      # decode caches: seq replicated by default
+            "cache_heads": "model",
+            "cache_head_dim": "model",  # fallback when kv_heads % model != 0
+            # --- params ---
+            "d_model": "data",      # FSDP axis
+            "heads": "model",
+            "kv_heads": "model",
+            "head_dim": None,
+            "d_ff": "model",
+            "vocab": "model",
+            "experts": None,        # TP-MoE: experts replicated, d_ff split
+            "layers": None,
+            "ssm_state": None,
+            "ssm_heads": "model",
+            "conv_width": None,
+            "frames": None,
+        })
+
+    def with_overrides(self, **kv: MeshAxes) -> "ShardingRules":
+        new = dict(self.rules)
+        new.update(kv)
+        return ShardingRules(rules=new)
+
+    def mesh_axes(self, logical: str | None) -> MeshAxes:
+        if logical is None:
+            return None
+        if logical not in self.rules:
+            raise KeyError(f"no sharding rule for logical axis {logical!r}")
+        return self.rules[logical]
+
+    def pspec(self, axes: tuple[str | None, ...], mesh: Mesh,
+              shape: tuple[int, ...] | None = None) -> P:
+        return resolve_pspec(shape or tuple(None for _ in axes), axes,
+                             self, mesh)
+
+
+# ---------------------------------------------------------------------------
+
+
+def resolve_pspec(shape, axes, rules: ShardingRules, mesh: Mesh) -> P:
+    """Greedy dim->mesh-axis assignment with divisibility + no-reuse.
+
+    For each dim (in order), take the rule's mesh axes left-to-right and
+    keep every axis that (a) exists in this mesh, (b) is not already used
+    by an earlier dim, and (c) keeps the dim evenly divisible. This makes
+    fallback chains expressible in the rules themselves — e.g. decode
+    caches list both ``cache_heads -> model`` and ``cache_head_dim ->
+    model``: whichever dim divides first claims the axis.
+    """
+    out, used = [], set()
+    for dim, a in zip(shape, axes):
+        m = rules.mesh_axes(a)
+        if m is None:
+            out.append(None)
+            continue
+        ms = (m,) if isinstance(m, str) else tuple(m)
+        chosen, prod = [], 1
+        for x in ms:
+            if x not in mesh.shape or x in used:
+                continue
+            if dim is not None and dim % (prod * mesh.shape[x]) != 0:
+                continue
+            chosen.append(x)
+            prod *= mesh.shape[x]
+        used.update(chosen)
+        out.append(tuple(chosen) if len(chosen) > 1
+                   else (chosen[0] if chosen else None))
+    return P(*out)
+
+
+def spec_for(ps: ParamSpec, rules: ShardingRules, mesh: Mesh) -> P:
+    return resolve_pspec(ps.shape, ps.axes, rules, mesh)
+
+
+def param_shardings(specs, rules: ShardingRules, mesh: Mesh):
+    return jax.tree.map(
+        lambda ps: NamedSharding(mesh, spec_for(ps, rules, mesh)),
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+_ACTIVE_RULES: list[ShardingRules] = []
+
+
+class use_rules:
+    """Context manager installing the rules used by ``constrain``."""
+
+    def __init__(self, rules: ShardingRules):
+        self.rules = rules
+
+    def __enter__(self):
+        _ACTIVE_RULES.append(self.rules)
+        return self.rules
+
+    def __exit__(self, *exc):
+        _ACTIVE_RULES.pop()
+
+
+def constrain(x, axes: tuple[str | None, ...]):
+    """with_sharding_constraint by logical axes; no-op without a mesh context.
+
+    Model code calls this on the few activations whose sharding XLA's
+    propagation gets wrong (most importantly the (batch, seq, VOCAB) logits,
+    which propagation otherwise replicates over 'model' — a ~16x activation
+    blowup on the production mesh).
+    """
+    from jax._src import mesh as mesh_lib
+    env = mesh_lib.thread_resources.env.physical_mesh
+    if env.empty:
+        return x
+    rules = _ACTIVE_RULES[-1] if _ACTIVE_RULES else ShardingRules.default(
+        multi_pod="pod" in env.shape)
+    spec = resolve_pspec(tuple(x.shape), axes, rules, env)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(env, spec))
+
+
+def tree_shardings(shape_tree, axes_tree, rules: ShardingRules, mesh: Mesh):
+    """Shardings for an arbitrary pytree of arrays/ShapeDtypeStructs given a
+    parallel tree of logical-axis tuples (used for decode caches)."""
+    leaves, tdef = jax.tree.flatten(shape_tree)
+    axes = tdef.flatten_up_to(axes_tree)
+    return tdef.unflatten([
+        NamedSharding(mesh, resolve_pspec(tuple(x.shape), ax, rules, mesh))
+        for x, ax in zip(leaves, axes)])
+
+
+def abstract_params(specs, dtype=None):
+    """ShapeDtypeStruct tree for dry-run lowering (no allocation)."""
+    return jax.tree.map(
+        lambda ps: jax.ShapeDtypeStruct(ps.shape, dtype or ps.dtype),
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def _init_one(ps: ParamSpec, key) -> jnp.ndarray:
+    if ps.init == "zeros":
+        return jnp.zeros(ps.shape, ps.dtype)
+    if ps.init == "ones":
+        return jnp.ones(ps.shape, ps.dtype)
+    fan_in = ps.shape[-2] if len(ps.shape) >= 2 else ps.shape[-1]
+    std = ps.scale / np.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, ps.shape, jnp.float32) * std).astype(ps.dtype)
+
+
+def init_params(specs, key):
+    """Materialize real parameters (smoke tests / examples)."""
+    leaves, treedef = jax.tree.flatten(
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+    keys = jax.random.split(key, len(leaves))
+    vals = [_init_one(ps, k) for ps, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, vals)

@@ -1,0 +1,10 @@
+# NOTE: no XLA_FLAGS here on purpose — tests must see the host's real
+# single CPU device. Only launch/dryrun.py (never imported by tests)
+# forces the 512-device count.
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

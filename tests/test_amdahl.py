@@ -1,0 +1,53 @@
+"""The paper's performance models (§IV): Amdahl + O(n log n / (0.8 S C))."""
+
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.amdahl import (ClusterModel, amdahl_speedup,
+                               calibrate_unit_time, fit_parallel_fraction,
+                               paper_runtime_model)
+
+
+def test_amdahl_limits():
+    assert amdahl_speedup(0.0, 1000) == 1.0           # fully serial
+    assert amdahl_speedup(1.0, 8) == 8.0              # fully parallel
+    # paper's CPU case: P ~ 0.25 (75% I/O) caps speedup at 1/(1-P)
+    assert amdahl_speedup(0.25, 10**9) == pytest.approx(4 / 3, rel=1e-6)
+
+
+@settings(max_examples=30, deadline=None)
+@given(p=st.floats(0.01, 0.99), n=st.integers(1, 512))
+def test_amdahl_monotone_and_bounded(p, n):
+    s = amdahl_speedup(p, n)
+    assert 1.0 <= s <= n + 1e-9 or s <= 1 / (1 - p) + 1e-9
+    assert amdahl_speedup(p, n + 1) >= s - 1e-12
+
+
+def test_fit_parallel_fraction_matches_paper_figures():
+    # Fig 4: CPU spends 70-75% in I/O -> P ~ 0.25-0.3
+    assert 0.2 < fit_parallel_fraction(72.5, 27.5) < 0.3
+    # Fig 5: GPU spends 92-95% in I/O -> P ~ 0.05-0.08
+    assert 0.04 < fit_parallel_fraction(93.5, 6.5) < 0.09
+
+
+def test_runtime_model_scaling():
+    t1 = paper_runtime_model(1 << 20, servers=1, cores=4)
+    t8 = paper_runtime_model(1 << 20, servers=8, cores=4)
+    assert t1 / t8 == pytest.approx(8.0, rel=1e-9)  # linear in servers
+    # doubling n slightly more than doubles runtime (n log n)
+    t2n = paper_runtime_model(1 << 21, servers=1, cores=4)
+    assert 2.0 < t2n / t1 < 2.2
+
+
+def test_calibrate_then_predict_consistent():
+    n = 1 << 22
+    unit = calibrate_unit_time(n, measured_s=10.0, cores=4)
+    m = ClusterModel(unit_time_s=unit, efficiency=0.8)
+    # predicting the calibration point back, with the 0.8 factor applied
+    assert m.predict(n, 1, 4) == pytest.approx(10.0 / 0.8, rel=1e-9)
+    # speedup baseline is 1 server x 1 core: 8 servers x 4 cores => 32x
+    assert m.speedup(n, 8, 4) == pytest.approx(32.0, rel=1e-9)
+    assert (m.predict(n, 1, 4) / m.predict(n, 8, 4)
+            == pytest.approx(8.0, rel=1e-9))

@@ -1,0 +1,59 @@
+"""Checkpoint manager: atomicity, commit markers, GC, async, resume."""
+
+import json
+import shutil
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.checkpoint import CheckpointManager, latest_step, restore, save
+
+
+def _tree(x=0.0):
+    return {"a": jnp.full((4, 4), 1.0 + x), "b": {"c": jnp.full((2,), 2.0 + x)}}
+
+
+def test_save_restore_roundtrip(tmp_path):
+    t = _tree()
+    save(3, t, tmp_path)
+    got = restore(tmp_path, 3, t)
+    np.testing.assert_array_equal(np.asarray(got["a"]), np.asarray(t["a"]))
+    np.testing.assert_array_equal(np.asarray(got["b"]["c"]),
+                                  np.asarray(t["b"]["c"]))
+
+
+def test_latest_ignores_torn_checkpoint(tmp_path):
+    save(1, _tree(), tmp_path)
+    save(2, _tree(), tmp_path)
+    # simulate a crash mid-save of step 3: directory without COMMIT
+    torn = tmp_path / "step_00000003"
+    shutil.copytree(tmp_path / "step_00000002", torn)
+    (torn / "COMMIT").unlink()
+    assert latest_step(tmp_path) == 2
+
+
+def test_shape_mismatch_raises(tmp_path):
+    save(1, _tree(), tmp_path)
+    bad = {"a": jnp.zeros((5, 5)), "b": {"c": jnp.zeros((2,))}}
+    with pytest.raises(ValueError, match="shape"):
+        restore(tmp_path, 1, bad)
+
+
+def test_keep_n_gc(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep_n=2)
+    for s in (1, 2, 3, 4):
+        mgr.save_async(s, _tree(s))
+    mgr.wait()
+    mgr._gc()
+    steps = sorted(p.name for p in tmp_path.glob("step_*"))
+    assert steps == ["step_00000003", "step_00000004"]
+
+
+def test_async_save_then_restore_latest(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep_n=3)
+    mgr.save_async(7, _tree(0.5))
+    mgr.wait()
+    step, got = mgr.restore_latest(_tree())
+    assert step == 7
+    assert float(got["a"][0, 0]) == 1.5

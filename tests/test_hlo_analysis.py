@@ -1,0 +1,49 @@
+"""Collective-byte accounting from HLO text (pure parsing, no jax)."""
+
+from repro.launch.hlo_analysis import collective_stats, _shape_bytes
+
+
+HLO = """
+HloModule test
+  %ag = bf16[64,1024]{1,0} all-gather(bf16[4,1024]{1,0} %x), replica_groups={{0,1,2,3,4,5,6,7,8,9,10,11,12,13,14,15}}, dimensions={0}
+  %ar = f32[1024,1024]{1,0} all-reduce(f32[1024,1024]{1,0} %y), replica_groups=[16,16]<=[256], to_apply=%add
+  %rs = f32[64,1024]{1,0} reduce-scatter(f32[1024,1024]{1,0} %z), replica_groups={{0,1}}, dimensions={0}
+  %a2a = bf16[8,128]{1,0} all-to-all(bf16[8,128]{1,0} %w), replica_groups={{0,1,2,3,4,5,6,7}}
+  %cp = f32[256]{0} collective-permute(f32[256]{0} %v), source_target_pairs={{0,1}}
+  %ags = bf16[32]{0} all-gather-start(bf16[2]{0} %q), replica_groups={{0,1}}
+  %agd = bf16[32]{0} all-gather-done(bf16[32]{0} %ags)
+"""
+
+
+def test_shape_bytes():
+    assert _shape_bytes("bf16[64,1024]") == 64 * 1024 * 2
+    assert _shape_bytes("f32[256]") == 1024
+    assert _shape_bytes("(f32[2,2], bf16[4])") == 16 + 8
+
+
+def test_collective_stats_counts_and_bytes():
+    s = collective_stats(HLO)
+    assert s["all-gather"]["count"] == 2     # ag + ag-start (done not counted)
+    assert s["all-reduce"]["count"] == 1
+    assert s["reduce-scatter"]["count"] == 1
+    assert s["all-to-all"]["count"] == 1
+    assert s["collective-permute"]["count"] == 1
+
+    # all-gather: (N-1)/N * result bytes, N=16
+    ag = 64 * 1024 * 2
+    assert abs(s["all-gather"]["bytes"]
+               - (15 / 16 * ag + 1 / 2 * 32 * 2)) < 1e-6
+    # all-reduce: 2*(N-1)/N * bytes, N=16 (iota form)
+    ar = 1024 * 1024 * 4
+    assert abs(s["all-reduce"]["bytes"] - 2 * 15 / 16 * ar) < 1e-6
+    # reduce-scatter: (N-1) * result bytes, N=2
+    rs = 64 * 1024 * 4
+    assert abs(s["reduce-scatter"]["bytes"] - rs) < 1e-6
+    # collective-permute: full operand
+    assert s["collective-permute"]["bytes"] == 1024
+    assert s["total_bytes"] > 0
+
+
+def test_empty_module():
+    s = collective_stats("HloModule empty\n ROOT %r = f32[2]{0} add(...)")
+    assert s["total_bytes"] == 0

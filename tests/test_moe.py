@@ -1,0 +1,89 @@
+"""MoE dispatch invariants + TP implementation vs dense reference."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config
+from repro.models.moe import _dispatch_tensors, _route, moe_specs, moe_tp
+from repro.sharding.rules import init_params
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return get_config("mixtral-8x22b").reduced(capacity_factor=8.0)
+
+
+@pytest.fixture(scope="module")
+def params(cfg):
+    return init_params(moe_specs(cfg), jax.random.PRNGKey(0))
+
+
+def test_routing_normalized(cfg, params, rng):
+    x = jnp.asarray(rng.standard_normal((64, cfg.d_model)), jnp.float32)
+    w, idx = _route(cfg, params, x)
+    assert w.shape == (64, cfg.num_experts_per_tok)
+    np.testing.assert_allclose(np.asarray(w.sum(-1)), 1.0, rtol=1e-5)
+    assert int(idx.max()) < cfg.num_experts
+
+
+def test_dispatch_conserves_tokens_when_capacity_ample(cfg, params, rng):
+    n = 64
+    x = jnp.asarray(rng.standard_normal((n, cfg.d_model)), jnp.float32)
+    w, idx = _route(cfg, params, x)
+    dispatch, combine = _dispatch_tensors(cfg, w, idx, n)
+    # every (token, k) routed somewhere exactly once
+    per_token = np.asarray(dispatch.sum(axis=(1, 2)), np.float32)
+    np.testing.assert_allclose(per_token, cfg.num_experts_per_tok, atol=1e-3)
+    # combine weights sum to ~1 per token (renormalized softmax)
+    np.testing.assert_allclose(np.asarray(combine.sum(axis=(1, 2))), 1.0,
+                               atol=1e-3)
+    # no capacity slot double-booked
+    per_slot = np.asarray(dispatch.sum(axis=0))
+    assert per_slot.max() <= 1.0 + 1e-3
+
+
+def test_capacity_drops_when_tight(cfg, params, rng):
+    import dataclasses
+    tight = dataclasses.replace(cfg, capacity_factor=0.25)
+    n = 64
+    x = jnp.asarray(rng.standard_normal((n, cfg.d_model)), jnp.float32)
+    w, idx = _route(tight, params, x)
+    dispatch, _ = _dispatch_tensors(tight, w, idx, n)
+    assert float(dispatch.sum()) < n * tight.num_experts_per_tok  # drops happened
+
+
+def test_moe_tp_matches_dense_reference(cfg, params, rng):
+    """Capacity-ample TP dispatch == explicit per-token expert loop."""
+    b, s = 2, 32
+    x = jnp.asarray(rng.standard_normal((b, s, cfg.d_model)), jnp.float32)
+    got = np.asarray(moe_tp(cfg, params, x))
+
+    # dense reference: loop tokens, apply top-k experts directly
+    xf = np.asarray(x).reshape(-1, cfg.d_model)
+    w, idx = _route(cfg, params, jnp.asarray(xf))
+    w, idx = np.asarray(w), np.asarray(idx)
+    wi = np.asarray(params["wi"], np.float32)
+    wg = np.asarray(params["wg"], np.float32)
+    wo = np.asarray(params["wo"], np.float32)
+    want = np.zeros_like(xf)
+    for t in range(xf.shape[0]):
+        for j in range(cfg.num_experts_per_tok):
+            e = idx[t, j]
+            g = xf[t] @ wg[e]
+            g = g / (1 + np.exp(-g))  # silu
+            h = xf[t] @ wi[e]
+            want[t] += w[t, j] * ((g * h) @ wo[e])
+    want = want.reshape(b, s, cfg.d_model)
+    scale = np.abs(want).max()
+    assert np.abs(got - want).max() / scale < 2e-2  # bf16 dispatch tensors
+
+
+def test_shared_expert_added(rng):
+    cfg = get_config("llama4-scout-17b-a16e").reduced(capacity_factor=8.0)
+    params = init_params(moe_specs(cfg), jax.random.PRNGKey(1))
+    assert "shared_wi" in params
+    x = jnp.asarray(rng.standard_normal((2, 16, cfg.d_model)), jnp.float32)
+    y = moe_tp(cfg, params, x)
+    assert y.shape == x.shape and bool(jnp.isfinite(y).all())

@@ -1,0 +1,79 @@
+"""BlockStore / record / map-only pipeline behaviour + property tests."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.pipeline import (BlockStore, JobConfig, MapOnlyJob,
+                                 block_of_segments, segments_of_block)
+from repro.core.pipeline.records import segment_block_bytes
+
+
+def test_split_merge_identity(tmp_path, rng):
+    data = rng.bytes(1 << 18)
+    store = BlockStore(tmp_path / "s", block_bytes=1 << 14)
+    store.put_bytes(data)
+    assert len(store.blocks) == 16
+    job = MapOnlyJob(store, tmp_path / "o", lambda b, i: b,
+                     JobConfig(workers=3))
+    job.run()
+    job.merge(tmp_path / "m.bin")
+    assert (tmp_path / "m.bin").read_bytes() == data
+
+
+@settings(max_examples=20, deadline=None)
+@given(nbytes=st.integers(1, 1 << 12), block=st.sampled_from([64, 256, 4096]))
+def test_split_merge_identity_property(tmp_path_factory, nbytes, block):
+    tmp = tmp_path_factory.mktemp("bs")
+    data = np.random.default_rng(nbytes).bytes(nbytes)
+    store = BlockStore(tmp / "s", block_bytes=block)
+    store.put_bytes(data)
+    out = b"".join(store.read_block(i) for i in range(len(store.blocks)))
+    assert out == data
+    # offsets cover the file exactly once, in order
+    offs = [b.offset for b in store.blocks]
+    assert offs == sorted(offs)
+    assert sum(b.nbytes for b in store.blocks) == nbytes
+
+
+def test_block_names_sort_by_offset(tmp_path):
+    store = BlockStore(tmp_path / "s", block_bytes=8)
+    store.put_bytes(bytes(100))
+    names = [b.name() for b in store.blocks]
+    assert names == sorted(names)  # the getmerge ordering guarantee
+
+
+def test_record_layout_roundtrip(rng):
+    re = rng.standard_normal((7, 128)).astype(np.float32)
+    im = rng.standard_normal((7, 128)).astype(np.float32)
+    data = block_of_segments(re, im)
+    r2, i2 = segments_of_block(data, 128)
+    np.testing.assert_array_equal(re, r2)
+    np.testing.assert_array_equal(im, i2)
+
+
+def test_record_rejects_partial_segment():
+    with pytest.raises(ValueError):
+        segments_of_block(bytes(12), 128)
+
+
+def test_segment_block_bytes():
+    # paper's example: 1024-pt single-precision complex = 8KB per segment
+    assert segment_block_bytes(1024, 1) == 8192
+
+
+def test_getmerge_missing_block_raises(tmp_path):
+    store = BlockStore(tmp_path / "s", block_bytes=16)
+    store.put_bytes(bytes(64))
+    (tmp_path / "o").mkdir()
+    store.write_output_block(tmp_path / "o", 0, bytes(16))
+    with pytest.raises(IOError, match="missing"):
+        store.getmerge(tmp_path / "o", tmp_path / "m.bin")
+
+
+def test_manifest_reopen(tmp_path):
+    store = BlockStore(tmp_path / "s", block_bytes=32, replication=2)
+    store.put_bytes(bytes(range(100)) * 2)
+    again = BlockStore.open(tmp_path / "s")
+    assert [vars(b) for b in again.blocks] == [vars(b) for b in store.blocks]
+    assert again.read_block(1) == store.read_block(1)

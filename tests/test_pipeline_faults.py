@@ -1,0 +1,107 @@
+"""Fault-tolerance behaviour: retries, speculation, resume, replicas."""
+
+import time
+
+import pytest
+
+from repro.core.pipeline import BlockStore, JobConfig, MapOnlyJob
+
+
+def _store(tmp_path, blocks=6, replication=1):
+    store = BlockStore(tmp_path / "in", block_bytes=64,
+                       replication=replication)
+    store.put_bytes(bytes(64 * blocks))
+    return store
+
+
+def test_retry_then_succeed(tmp_path):
+    store = _store(tmp_path)
+    fails = {"n": 0}
+
+    def flaky(data, idx):
+        if idx == 2 and fails["n"] < 2:
+            fails["n"] += 1
+            raise RuntimeError("injected")
+        return data
+
+    job = MapOnlyJob(store, tmp_path / "out", flaky,
+                     JobConfig(workers=2, max_retries=5))
+    stats = job.run()
+    assert stats.blocks_done == 6
+    assert stats.retries == 2
+
+
+def test_poisoned_block_fails_job_after_budget(tmp_path):
+    store = _store(tmp_path)
+
+    def poison(data, idx):
+        if idx == 1:
+            raise RuntimeError("always fails")
+        return data
+
+    job = MapOnlyJob(store, tmp_path / "out", poison,
+                     JobConfig(workers=2, max_retries=3))
+    with pytest.raises(RuntimeError, match="block 1 failed 3 times"):
+        job.run()
+    # other blocks still completed and are resumable
+    assert job.manifest.tasks[1].status == "FAILED"
+
+
+def test_crash_resume_skips_done_blocks(tmp_path):
+    store = _store(tmp_path)
+    job = MapOnlyJob(store, tmp_path / "out", lambda b, i: b,
+                     JobConfig(workers=2))
+    job.run()
+    # a restarted job re-reads the manifest and has nothing to do
+    job2 = MapOnlyJob(store, tmp_path / "out", lambda b, i: b,
+                      JobConfig(workers=2))
+    stats = job2.run()
+    assert stats.attempts == 0
+
+
+def test_running_state_resets_to_pending_on_reopen(tmp_path):
+    store = _store(tmp_path)
+    job = MapOnlyJob(store, tmp_path / "out", lambda b, i: b)
+    job.manifest.update(3, status="RUNNING")  # simulate crash mid-task
+    job2 = MapOnlyJob(store, tmp_path / "out", lambda b, i: b,
+                      JobConfig(workers=2))
+    assert 3 in job2.manifest.pending()
+
+
+def test_speculative_execution_fires(tmp_path):
+    store = _store(tmp_path, blocks=8)
+
+    def slow_tail(data, idx):
+        time.sleep(0.6 if idx == 7 else 0.01)
+        return data
+
+    job = MapOnlyJob(store, tmp_path / "out", slow_tail,
+                     JobConfig(workers=4, straggler_factor=3.0,
+                               min_completed_for_speculation=3))
+    stats = job.run()
+    assert stats.blocks_done == 8
+    assert stats.speculative_launches >= 1
+
+
+def test_replica_fallback_on_corruption(tmp_path):
+    store = _store(tmp_path, replication=2)
+    good = store.read_block(0)
+    store.corrupt_block(0, replica=0)
+    assert store.read_block(0) == good  # checksum catches, replica serves
+
+
+def test_all_replicas_corrupt_raises(tmp_path):
+    store = _store(tmp_path, replication=2)
+    store.corrupt_block(0, replica=0)
+    store.corrupt_block(0, replica=1)
+    with pytest.raises(IOError):
+        store.read_block(0)
+
+
+def test_idempotent_output_writes(tmp_path):
+    """Two attempts writing the same block must be benign (speculation)."""
+    store = _store(tmp_path)
+    store.write_output_block(tmp_path / "out", 0, b"x" * 64)
+    store.write_output_block(tmp_path / "out", 0, b"x" * 64)
+    files = list((tmp_path / "out").glob("block_*.bin"))
+    assert len(files) == 1

@@ -1,0 +1,71 @@
+"""Roofline-methodology invariants.
+
+1. Demonstrates the XLA gap the dry-run works around: cost_analysis counts
+   a while-loop body once, ignoring trip count.
+2. Validates the per-period extrapolation: with scans unrolled, cost is
+   exactly linear in depth, so C(4p) == C(1p) + 3*(C(2p) - C(1p)).
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config
+from repro.models.scanning import set_unroll
+from repro.models.transformer import TransformerLM
+from repro.sharding.rules import abstract_params
+
+
+def test_cost_analysis_scan_gap():
+    """The motivating bug: scan flops counted once regardless of length."""
+    x = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+
+    def f_scan(x):
+        h, _ = jax.lax.scan(lambda h, _: (h @ h, None), x, None, length=10)
+        return h
+
+    def f_unroll(x):
+        h = x
+        for _ in range(10):
+            h = h @ h
+        return h
+
+    fs = jax.jit(f_scan).lower(x).compile().cost_analysis()["flops"]
+    fu = jax.jit(f_unroll).lower(x).compile().cost_analysis()["flops"]
+    assert fu > 5 * fs  # scan undercounts ~10x
+
+
+def _loss_flops(cfg, b=2, s=64):
+    model = TransformerLM(cfg)
+    params = abstract_params(model.param_specs())
+    batch = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    c = jax.jit(model.loss).lower(params, batch).compile()
+    return c.cost_analysis()["flops"]
+
+
+@pytest.mark.parametrize("arch", ["qwen2-0.5b", "gemma3-1b"])
+def test_extrapolation_is_exact_when_unrolled(arch):
+    cfg0 = get_config(arch).reduced()
+    period = len(cfg0.layer_pattern)
+    set_unroll(True)
+    try:
+        c1 = _loss_flops(dataclasses.replace(cfg0, num_layers=period))
+        c2 = _loss_flops(dataclasses.replace(cfg0, num_layers=2 * period))
+        c4 = _loss_flops(dataclasses.replace(cfg0, num_layers=4 * period))
+    finally:
+        set_unroll(False)
+    extrapolated = c1 + 3 * (c2 - c1)
+    assert abs(extrapolated - c4) / c4 < 0.02
+
+
+def test_unrolled_flops_exceed_scanned():
+    cfg = get_config("qwen2-0.5b").reduced()
+    set_unroll(True)
+    try:
+        unrolled = _loss_flops(cfg)
+    finally:
+        set_unroll(False)
+    scanned = _loss_flops(cfg)
+    assert unrolled > 2 * scanned  # 6 layers of real work vs 1 counted

@@ -1,0 +1,84 @@
+"""resolve_pspec: divisibility, no-reuse, fallback chains (1-device safe).
+
+Mesh construction with >1 axis needs >1 device, so these tests build
+abstract meshes via jax.sharding.Mesh over a numpy grid of the single CPU
+device repeated — not executable, but resolve_pspec only reads .shape.
+"""
+
+import numpy as np
+import jax
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.sharding.rules import ParamSpec, ShardingRules, resolve_pspec, spec_for
+
+
+class FakeMesh:
+    """Duck-typed mesh: resolve_pspec only touches .shape."""
+
+    def __init__(self, **axes):
+        self.shape = dict(axes)
+
+
+RULES = ShardingRules.default()
+MESH = FakeMesh(data=16, model=16)
+MESH_MP = FakeMesh(pod=2, data=16, model=16)
+
+
+def test_basic_tp_fsdp():
+    ps = ParamSpec((1024, 4096), ("d_model", "d_ff"))
+    assert spec_for(ps, RULES, MESH) == P("data", "model")
+
+
+def test_divisibility_drops_axis():
+    # 14 heads don't divide 16 -> heads replicated
+    ps = ParamSpec((896, 14, 64), ("d_model", "heads", "head_dim"))
+    assert spec_for(ps, RULES, MESH) == P("data", None, None)
+
+
+def test_fallback_chain_cache_heads_then_head_dim():
+    rules = RULES
+    # kv=8 doesn't divide 16, head_dim=128 does -> fallback claims model
+    spec = resolve_pspec((128, 32768, 8, 128),
+                         ("cache_batch", "cache_seq", "cache_heads",
+                          "cache_head_dim"), rules, MESH)
+    assert spec == P("data", None, None, "model")
+
+
+def test_no_axis_reuse():
+    # kv=32 divides -> heads take model; head_dim must NOT reuse it
+    spec = resolve_pspec((128, 4096, 32, 128),
+                         ("cache_batch", "cache_seq", "cache_heads",
+                          "cache_head_dim"), RULES, MESH)
+    assert spec == P("data", None, "model", None)
+
+
+def test_batch_of_one_replicates():
+    spec = resolve_pspec((1, 1), ("cache_batch", None), RULES, MESH)
+    assert spec == P(None, None)
+
+
+def test_multi_pod_batch_tuple():
+    rules = ShardingRules.default(multi_pod=True)
+    spec = resolve_pspec((256, 4096), ("batch", "seq"), rules, MESH_MP)
+    assert spec == P(("pod", "data"), None)
+
+
+def test_multi_pod_partial_tuple():
+    # batch=2 only fits the pod axis (2), not pod*data
+    rules = ShardingRules.default(multi_pod=True)
+    spec = resolve_pspec((2, 4096), ("batch", "seq"), rules, MESH_MP)
+    assert spec == P("pod", None)
+
+
+def test_overrides():
+    rules = RULES.with_overrides(cache_seq="model")
+    spec = resolve_pspec((128, 32768, 8, 128),
+                         ("cache_batch", "cache_seq", "cache_heads",
+                          "cache_head_dim"), rules, MESH)
+    assert spec == P("data", "model", None, None)
+
+
+def test_unknown_logical_axis_raises():
+    import pytest
+    with pytest.raises(KeyError):
+        resolve_pspec((4,), ("nonsense",), RULES, MESH)
