@@ -1,0 +1,143 @@
+"""FFT hot-path benchmark: legacy copy layout vs zero-copy vs rfft.
+
+Tracks the PR's two perf claims so the trajectory is machine-readable
+(BENCH_fft.json at the repo root):
+
+  1. the zero-copy four-step moves strictly fewer HBM bytes than the
+     seed's reshape+swapaxes path (4 traversals vs 10 at level 1);
+  2. the real-input fast path costs <= ~55% of the full complex transform
+     at the same n on the roofline byte/flop counters.
+
+Bytes come from the analytic counters in kernels/fft/plan.py (exact planar
+payload traffic of each pallas pass / transpose, the roofline numerators —
+wall clock on this CPU container runs the interpreter, so it sanity-checks
+but does not measure HBM). The roofline cost of a variant is
+max(flops/PEAK_FLOPS, bytes/HBM_BW) with the constants from
+benchmarks/roofline.py.
+"""
+
+from __future__ import annotations
+
+import json
+import math
+from pathlib import Path
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import block_until_ready, timeit
+from benchmarks.roofline import HBM_BW, PEAK_FLOPS
+from repro.kernels.fft import ops, plan
+
+OUT_PATH = Path(__file__).resolve().parent.parent / "BENCH_fft.json"
+
+# (n, rows): level-0 leaf, the fused-rfft sweet spot, and two level-1
+# four-step sizes (n > MAX_LEAF) where the transpose elimination bites.
+SIZES = [(4096, 16), (8192, 16), (32768, 4), (1 << 16, 2)]
+QUICK_SIZES = [(8192, 8), (32768, 2)]
+
+
+def _complex_flops(n: int) -> float:
+    """Algorithmic roofline numerator, roofline.py convention."""
+    return 5.0 * n * math.log2(n)
+
+
+def _rfft_flops(n: int) -> float:
+    """Half-length transform + O(m) untangle (~10 real ops per bin)."""
+    m = n // 2
+    return 5.0 * m * math.log2(m) + 10.0 * m
+
+
+def _roofline_s(flops: float, bytes_: float) -> float:
+    return max(flops / PEAK_FLOPS, bytes_ / HBM_BW)
+
+
+def bench_size(n: int, rows: int, iters: int) -> dict:
+    rng = np.random.default_rng(0)
+    xr = jnp.asarray(rng.standard_normal((rows, n)).astype(np.float32))
+    xi = jnp.asarray(rng.standard_normal((rows, n)).astype(np.float32))
+
+    fns = {
+        "copy": jax.jit(lambda a, b: ops.fft(a, b, layout="copy")),
+        "zero_copy": jax.jit(lambda a, b: ops.fft(a, b, layout="zero_copy")),
+    }
+    rfft_fn = jax.jit(lambda a: ops.rfft(a))
+
+    rec = {"n": n, "rows": rows, "levels": plan.make_plan(n).levels,
+           "variants": {}}
+    for name, fn in fns.items():
+        wall = timeit(lambda: block_until_ready(fn(xr, xi)),
+                      warmup=1, iters=iters)
+        bytes_row = plan.fft_hbm_bytes(n, layout=name)
+        flops_row = _complex_flops(n)
+        rec["variants"][name] = {
+            "wall_us": wall * 1e6,
+            "hbm_bytes_per_row": bytes_row,
+            "flops_per_row": flops_row,
+            "roofline_s_per_row": _roofline_s(flops_row, bytes_row),
+        }
+    wall = timeit(lambda: block_until_ready(rfft_fn(xr)),
+                  warmup=1, iters=iters)
+    bytes_row = plan.rfft_hbm_bytes(n)
+    flops_row = _rfft_flops(n)
+    rec["variants"]["rfft"] = {
+        "wall_us": wall * 1e6,
+        "hbm_bytes_per_row": bytes_row,
+        "flops_per_row": flops_row,
+        "roofline_s_per_row": _roofline_s(flops_row, bytes_row),
+    }
+
+    v = rec["variants"]
+    rec["zero_copy_bytes_ratio"] = (v["zero_copy"]["hbm_bytes_per_row"]
+                                    / v["copy"]["hbm_bytes_per_row"])
+    rec["rfft_cost_ratio"] = (v["rfft"]["roofline_s_per_row"]
+                              / v["zero_copy"]["roofline_s_per_row"])
+    return rec
+
+
+def run(quick: bool = False):
+    sizes = QUICK_SIZES if quick else SIZES
+    iters = 2 if quick else 3
+    recs = [bench_size(n, rows, iters) for n, rows in sizes]
+
+    level1 = [r for r in recs if r["levels"] > 1]
+    fused_rfft = [r for r in recs
+                  if plan.make_plan(r["n"] // 2).levels == 1]
+    checks = {
+        # acceptance: strictly fewer HBM bytes than the seed path at level 1
+        "zero_copy_fewer_bytes": all(
+            r["variants"]["zero_copy"]["hbm_bytes_per_row"]
+            < r["variants"]["copy"]["hbm_bytes_per_row"] for r in level1),
+        # acceptance: rfft <= ~55% of the complex transform at the same n
+        # (fused-epilogue regime: n//2 is a leaf length)
+        "rfft_cost_le_55pct": all(
+            r["rfft_cost_ratio"] <= 0.55 for r in fused_rfft),
+    }
+    OUT_PATH.write_text(json.dumps(
+        {"quick": quick, "checks": checks, "sizes": recs}, indent=1))
+
+    out = []
+    for r in recs:
+        for name, v in r["variants"].items():
+            out.append({
+                "name": f"fft_{r['n']}_{name}",
+                "us_per_call": v["wall_us"],
+                "derived": (f"bytes/row={v['hbm_bytes_per_row']} "
+                            f"roofline={v['roofline_s_per_row']:.3e}s"),
+            })
+        out.append({
+            "name": f"fft_{r['n']}_summary",
+            "us_per_call": 0.0,
+            "derived": (f"zero_copy/copy bytes={r['zero_copy_bytes_ratio']:.3f} "
+                        f"rfft/complex cost={r['rfft_cost_ratio']:.3f}"),
+        })
+    out.append({"name": "fft_checks", "us_per_call": 0.0,
+                "derived": " ".join(f"{k}={'PASS' if ok else 'FAIL'}"
+                                    for k, ok in checks.items())})
+    return out
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(row)

@@ -12,14 +12,15 @@ import argparse
 import sys
 import traceback
 
-from benchmarks import (fig2_total_time, fig3_fft_time, fig45_io_fraction,
-                        fig6_scaling, roofline)
+from benchmarks import (bench_fft, fig2_total_time, fig3_fft_time,
+                        fig45_io_fraction, fig6_scaling, roofline)
 
 MODULES = {
     "fig2": fig2_total_time,
     "fig3": fig3_fft_time,
     "fig45": fig45_io_fraction,
     "fig6": fig6_scaling,
+    "fft": bench_fft,
     "roofline": roofline,
 }
 

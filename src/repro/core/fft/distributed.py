@@ -38,6 +38,7 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro import compat
 from repro.kernels.fft import ops as fft_ops
 from repro.kernels.fft import plan as fft_plan
 
@@ -83,7 +84,8 @@ def _twiddle(i2g: jnp.ndarray, o1: jnp.ndarray, n: int):
 def distributed_fft(xr: jnp.ndarray, xi: jnp.ndarray, mesh: Mesh,
                     axis_names=("data", "model"), *, impl: str = "matfft",
                     natural_order: bool = True, fuse_twiddle: bool = False,
-                    interpret: bool | None = None):
+                    interpret: bool | None = None,
+                    layout: str = "zero_copy"):
     """Forward FFT of a single length-n planar signal sharded over ``mesh``.
 
     Args:
@@ -92,6 +94,11 @@ def distributed_fft(xr: jnp.ndarray, xi: jnp.ndarray, mesh: Mesh,
       natural_order: if False, skip all_to_all #3 and return the transform
         in transposed (o1-major) block order — FFTW's TRANSPOSED_OUT, useful
         when a subsequent pointwise op + inverse FFT follows (convolution).
+      layout: "zero_copy" folds the local `.T` at each pass boundary into
+        the column-strided Pallas kernel (ops.fft_cols) — the all_to_all
+        already did the cross-device transpose, so no device-local
+        transposed copy is materialized either; "copy" keeps the legacy
+        materialized transposes (measured baseline).
     Returns planar (n,) arrays, sharded like the input.
     """
     if isinstance(axis_names, str):
@@ -116,6 +123,9 @@ def distributed_fft(xr: jnp.ndarray, xi: jnp.ndarray, mesh: Mesh,
         ai = a2a(xi_loc.reshape(n1l, n2))
 
         # ---- pass 1: FFT columns (length n1), batched over n2l ----
+        # fft_cols folds the local transpose into the kernel's BlockSpec:
+        # with layout="zero_copy" the (n1, n2l) shard is read column-strided
+        # and the (n2l, n1) result written row-major, no `.T` copy in HBM.
         can_fuse = (fuse_twiddle and impl == "matfft"
                     and fft_plan.make_plan(n1).levels == 1)
         if can_fuse:
@@ -123,10 +133,12 @@ def distributed_fft(xr: jnp.ndarray, xi: jnp.ndarray, mesh: Mesh,
             # rows of this batch are i2-local, so the kernel's global row
             # offset is didx*n2l; the table is never materialized in HBM
             row_off = (didx * n2l).astype(jnp.int32).reshape(1)
-            br, bi = fft_ops.fft(ar.T, ai.T, impl=impl, interpret=interpret,
-                                 global_twiddle=(n, row_off))
+            br, bi = fft_ops.fft_cols(ar, ai, impl=impl, interpret=interpret,
+                                      global_twiddle=(n, row_off),
+                                      layout=layout)
         else:
-            ar, ai = fft_ops.fft(ar.T, ai.T, impl=impl, interpret=interpret)
+            ar, ai = fft_ops.fft_cols(ar, ai, impl=impl, interpret=interpret,
+                                      layout=layout)
             # ar: (n2l, n1), rows = local i2, cols = o1
             # ---- twiddle W_n^{i2_global * o1}, computed on the fly ----
             i2g = didx * n2l + jnp.arange(n2l, dtype=jnp.uint32)
@@ -138,7 +150,8 @@ def distributed_fft(xr: jnp.ndarray, xi: jnp.ndarray, mesh: Mesh,
         br, bi = a2a(br), a2a(bi)
 
         # ---- pass 2: FFT rows (length n2), batched over n1l ----
-        cr, ci = fft_ops.fft(br.T, bi.T, impl=impl, interpret=interpret)
+        cr, ci = fft_ops.fft_cols(br, bi, impl=impl, interpret=interpret,
+                                  layout=layout)
         # cr: (n1l, n2), rows = local o1, cols = o2
 
         if not natural_order:
@@ -151,8 +164,8 @@ def distributed_fft(xr: jnp.ndarray, xi: jnp.ndarray, mesh: Mesh,
 
     spec = P(ax)
     # check_vma=False: pallas_call out_shapes do not carry vma metadata.
-    fn = jax.shard_map(local, mesh=mesh, in_specs=(spec, spec),
-                       out_specs=(spec, spec), check_vma=False)
+    fn = compat.shard_map(local, mesh=mesh, in_specs=(spec, spec),
+                          out_specs=(spec, spec), check_vma=False)
     return fn(xr, xi)
 
 

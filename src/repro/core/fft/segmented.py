@@ -16,30 +16,34 @@ from __future__ import annotations
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.kernels.fft import ops as fft_ops
 
 
 def segmented_fft(xr, xi, mesh: Mesh, batch_axes=("pod", "data", "model"), *,
-                  impl: str = "matfft", interpret: bool | None = None):
+                  impl: str = "matfft", interpret: bool | None = None,
+                  layout: str = "zero_copy"):
     """Batched FFT of (batch, n) planar arrays, batch sharded over the mesh.
 
     Each device transforms its own rows — one "map task" per shard, no
     reduce phase. Lengths up to MAX_LEAF**2 per segment (level-1 local
-    four-step); longer single transforms need distributed_fft.
+    four-step, zero-copy by default); longer single transforms need
+    distributed_fft.
     """
     batch_axes = tuple(a for a in batch_axes if a in mesh.shape)
     spec = P(batch_axes, None)
     sharding = NamedSharding(mesh, spec)
 
     def f(xr, xi):
-        return fft_ops.fft(xr, xi, impl=impl, interpret=interpret)
+        return fft_ops.fft(xr, xi, impl=impl, interpret=interpret,
+                           layout=layout)
 
     # shard_map (not bare pjit): XLA cannot partition through an opaque
     # pallas_call, so auto-sharding would insert all-gathers — the exact
     # failure mode the paper's map-only design exists to avoid. shard_map
     # pins one program instance per shard; the compiled HLO has zero
     # collectives (asserted in tests).
-    inner = jax.shard_map(f, mesh=mesh, in_specs=(spec, spec),
-                          out_specs=(spec, spec), check_vma=False)
+    inner = compat.shard_map(f, mesh=mesh, in_specs=(spec, spec),
+                             out_specs=(spec, spec), check_vma=False)
     return jax.jit(inner, in_shardings=(sharding, sharding),
                    out_shardings=(sharding, sharding))(xr, xi)

@@ -38,14 +38,15 @@ def frame_signal(x: jnp.ndarray, frame: int, hop: int) -> jnp.ndarray:
 def stft(x: jnp.ndarray, frame: int = 1024, hop: int = 512, *,
          window: bool = True, impl: str = "matfft",
          interpret: bool | None = None):
-    """Short-time Fourier transform -> planar (..., n_frames, frame//2+1)."""
+    """Short-time Fourier transform -> planar (..., n_frames, frame//2+1).
+
+    Frames are real, so this rides the rfft fast path: half-length packed
+    transform + fused untangle, ~half the flops/bytes of fft()+slice.
+    """
     frames = frame_signal(x.astype(jnp.float32), frame, hop)
     if window:
         frames = frames * jnp.asarray(_hann(frame))
-    yr, yi = fft_ops.fft(frames, jnp.zeros_like(frames), impl=impl,
-                         interpret=interpret)
-    k = frame // 2 + 1
-    return yr[..., :k], yi[..., :k]
+    return fft_ops.rfft(frames, impl=impl, interpret=interpret)
 
 
 def power_spectrogram(x, frame=1024, hop=512, **kw):
@@ -69,12 +70,14 @@ def fft_conv(x: jnp.ndarray, kernel: jnp.ndarray, *, impl: str = "matfft",
     n = _next_pow2(t + tk)
     xp = jnp.pad(x.astype(jnp.float32), [(0, 0)] * (x.ndim - 1) + [(0, n - t)])
     kp = jnp.pad(kernel.astype(jnp.float32), (0, n - tk))
-    z = jnp.zeros_like(xp)
-    xr, xi = fft_ops.fft(xp, z, impl=impl, interpret=interpret)
-    kr, ki = fft_ops.fft(kp, jnp.zeros_like(kp), impl=impl, interpret=interpret)
+    # Both operands are real: multiply one-sided rfft spectra (conjugate
+    # symmetry survives the product) and invert with irfft — every
+    # transform runs at half length.
+    xr, xi = fft_ops.rfft(xp, impl=impl, interpret=interpret)
+    kr, ki = fft_ops.rfft(kp, impl=impl, interpret=interpret)
     pr = xr * kr - xi * ki
     pi = xr * ki + xi * kr
-    yr, _ = fft_ops.ifft(pr, pi, impl=impl, interpret=interpret)
+    yr = fft_ops.irfft(pr, pi, impl=impl, interpret=interpret)
     return yr[..., :t]
 
 

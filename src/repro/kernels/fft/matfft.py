@@ -1,4 +1,4 @@
-"""MXU matmul-DFT Pallas kernel (the primary FFT kernel).
+"""MXU matmul-DFT Pallas kernels (the primary FFT kernels).
 
 Hardware adaptation (see DESIGN.md §2): CUFFT runs Cooley-Tukey butterflies
 on scalar CUDA cores; a TPU's throughput lives in the MXU systolic array,
@@ -12,13 +12,27 @@ i.e. 8 real (planar complex) 2-D GEMMs per tile, all operands resident in
 VMEM. For n <= DIRECT_N the full (n, n) DFT matrix is used instead (one
 complex GEMM, perfectly MXU-aligned at n = 128/256).
 
+Three kernel entry points share that tile math (DESIGN.md §3):
+
+  * ``matfft``       row-major batch: (rows, n) in, (rows, n) out.
+  * ``matfft_cols``  column-strided batch: transforms the MIDDLE axis of a
+    (B, L, C) view. The BlockSpec index map fetches (1, L, ct) tiles, the
+    transpose happens in VMEM, and the output is written either row-major
+    or back in column order. Chaining two of these is the ZERO-COPY host
+    four-step: no transposed tensor is ever materialized in HBM — the TPU
+    analogue of the paper's "one allocate+memcpy pair per block" rule.
+  * ``rfft_leaf``    real-input fast path: n real samples enter as the
+    free (rows, n/2, 2) reshape (even samples = re, odd = im), one
+    half-length DFT runs on the MXU, and the kernel epilogue untangles the
+    conjugate-symmetric half spectrum — half the flops AND half the HBM
+    bytes of the complex transform it replaces.
+
 The optional *epilogue* input fuses the four-step's outer twiddle multiply
-into the kernel's final store, which is what removes one full HBM round-trip
-when this kernel is used as the leaf of a host-level (or distributed-level)
-four-step — the TPU analogue of the paper's "one allocate+memcpy pair per
-block" PCIe-minimization rule. The epilogue operand is a (rows_period, n)
-table indexed *periodically* by the grid, so it costs O(table) HBM traffic,
-not O(batch * n).
+into the kernel's final store, which removes one full HBM round-trip when
+a kernel is used as the leaf of a host-level (or distributed-level)
+four-step. The epilogue operand is a (rows_period, n) table indexed
+*periodically* by the grid, so it costs O(table) HBM traffic, not
+O(batch * n).
 
 Issued MAC count per batch row: 4*n*(n1+n2) real MACs vs the algorithmic
 5*n*log2(n) flops — the GEMM formulation trades ~2-5x more MACs for MXU
@@ -57,9 +71,45 @@ def _cgemm(ar, ai, br, bi):
     return dot(ar, br) - dot(ai, bi), dot(ar, bi) + dot(ai, br)
 
 
-def _global_twiddle(off_ref, bt, n, n_global):
+# ---------------------------------------------------------------------------
+# shared in-VMEM tile DFT (used by every kernel entry point)
+
+
+def _tile_dft_direct(xr, xi, wr, wi):
+    """Direct DFT of a (bt, n) VMEM tile: one complex GEMM."""
+    return _cgemm(xr, xi, wr, wi)
+
+
+def _tile_dft_4step(xr, xi, w1r, w1i, tr, ti, w2r, w2i, *, n1: int, n2: int):
+    """In-VMEM four-step DFT of a (bt, n1*n2) VMEM tile."""
+    bt = xr.shape[0]
+    n = n1 * n2
+
+    # x[b, i1, i2] -> (bt*n2, n1) rows=(b,i2): contract i1 on the MXU.
+    def col_major(x):
+        return x.reshape(bt, n1, n2).swapaxes(1, 2).reshape(bt * n2, n1)
+
+    ar, ai = _cgemm(col_major(xr), col_major(xi), w1r, w1i)  # cols = o1
+
+    # Inner twiddle T^T[i2, o1], broadcast over b.
+    ar = ar.reshape(bt, n2, n1)
+    ai = ai.reshape(bt, n2, n1)
+    br_, bi_ = _cmul(ar, ai, tr.reshape(1, n2, n1), ti.reshape(1, n2, n1))
+
+    # (bt*n1, n2) rows=(b,o1): contract i2 on the MXU.
+    br_ = br_.swapaxes(1, 2).reshape(bt * n1, n2)
+    bi_ = bi_.swapaxes(1, 2).reshape(bt * n1, n2)
+    cr, ci = _cgemm(br_, bi_, w2r, w2i)  # cols = o2
+
+    # X[b, o2*n1 + o1] = C[b, o1, o2] -> swap to (b, o2, o1) and flatten.
+    yr = cr.reshape(bt, n1, n2).swapaxes(1, 2).reshape(bt, n)
+    yi = ci.reshape(bt, n1, n2).swapaxes(1, 2).reshape(bt, n)
+    return yr, yi
+
+
+def _global_twiddle(row_base, bt, n, n_global):
     """On-the-fly W_{n_global}^{(global_row) * col} for one (bt, n) tile,
-    global_row = off_ref[0] + program_id(0)*bt + r.
+    global_row = row_base + r.
 
     Exponent reduced exactly via uint32 wraparound (n_global is pow2, see
     core/fft/distributed.py) — zero HBM traffic: the table is never
@@ -67,22 +117,28 @@ def _global_twiddle(off_ref, bt, n, n_global):
     This is the distributed four-step's twiddle fused into the leaf kernel
     epilogue (the cross-device analogue of the level-1 table epilogue).
     """
-    base = off_ref[0].astype(jnp.uint32) + jnp.uint32(pl.program_id(0) * bt)
-    row = base + jax.lax.broadcasted_iota(jnp.uint32, (bt, n), 0)
+    row = row_base.astype(jnp.uint32) + jax.lax.broadcasted_iota(
+        jnp.uint32, (bt, n), 0)
     col = jax.lax.broadcasted_iota(jnp.uint32, (bt, n), 1)
     m = (row * col) & jnp.uint32(n_global - 1)
     ang = (-2.0 * 3.14159265358979323846 / n_global) * m.astype(jnp.float32)
     return jnp.cos(ang), jnp.sin(ang)
 
 
+# ---------------------------------------------------------------------------
+# row-major batch kernel (level 0 leaf)
+
+
 def _dft_kernel(xr_ref, xi_ref, wr_ref, wi_ref, er_ref, ei_ref,
                 outr_ref, outi_ref, *, fuse_epilogue: bool,
                 global_n: int = 0):
     """Direct DFT: one complex GEMM with the full (n, n) DFT matrix."""
-    yr, yi = _cgemm(xr_ref[...], xi_ref[...], wr_ref[...], wi_ref[...])
+    yr, yi = _tile_dft_direct(xr_ref[...], xi_ref[...], wr_ref[...],
+                              wi_ref[...])
     if global_n:
         bt, n = yr.shape
-        tr, ti = _global_twiddle(er_ref, bt, n, global_n)
+        row_base = er_ref[0] + pl.program_id(0) * bt
+        tr, ti = _global_twiddle(row_base, bt, n, global_n)
         yr, yi = _cmul(yr, yi, tr, ti)
     elif fuse_epilogue:
         yr, yi = _cmul(yr, yi, er_ref[...], ei_ref[...])
@@ -95,33 +151,14 @@ def _matfft_kernel(xr_ref, xi_ref, w1r_ref, w1i_ref, tr_ref, ti_ref,
                    *, n1: int, n2: int, fuse_epilogue: bool,
                    global_n: int = 0):
     """In-VMEM four-step DFT of the (bt, n1*n2) tile."""
-    bt = xr_ref.shape[0]
-    n = n1 * n2
-
-    # x[b, i1, i2] -> (bt*n2, n1) rows=(b,i2): contract i1 on the MXU.
-    def col_major(ref):
-        return ref[...].reshape(bt, n1, n2).swapaxes(1, 2).reshape(bt * n2, n1)
-
-    ar, ai = _cgemm(col_major(xr_ref), col_major(xi_ref),
-                    w1r_ref[...], w1i_ref[...])  # (bt*n2, n1), cols = o1
-
-    # Inner twiddle T^T[i2, o1], broadcast over b.
-    tr = tr_ref[...].reshape(1, n2, n1)
-    ti = ti_ref[...].reshape(1, n2, n1)
-    ar = ar.reshape(bt, n2, n1)
-    ai = ai.reshape(bt, n2, n1)
-    br_, bi_ = _cmul(ar, ai, tr, ti)
-
-    # (bt*n1, n2) rows=(b,o1): contract i2 on the MXU.
-    br_ = br_.swapaxes(1, 2).reshape(bt * n1, n2)
-    bi_ = bi_.swapaxes(1, 2).reshape(bt * n1, n2)
-    cr, ci = _cgemm(br_, bi_, w2r_ref[...], w2i_ref[...])  # cols = o2
-
-    # X[b, o2*n1 + o1] = C[b, o1, o2] -> swap to (b, o2, o1) and flatten.
-    yr = cr.reshape(bt, n1, n2).swapaxes(1, 2).reshape(bt, n)
-    yi = ci.reshape(bt, n1, n2).swapaxes(1, 2).reshape(bt, n)
+    yr, yi = _tile_dft_4step(xr_ref[...], xi_ref[...],
+                             w1r_ref[...], w1i_ref[...],
+                             tr_ref[...], ti_ref[...],
+                             w2r_ref[...], w2i_ref[...], n1=n1, n2=n2)
     if global_n:
-        tr_, ti_ = _global_twiddle(er_ref, bt, n, global_n)
+        bt, n = yr.shape
+        row_base = er_ref[0] + pl.program_id(0) * bt
+        tr_, ti_ = _global_twiddle(row_base, bt, n, global_n)
         yr, yi = _cmul(yr, yi, tr_, ti_)
     elif fuse_epilogue:
         yr, yi = _cmul(yr, yi, er_ref[...], ei_ref[...])
@@ -225,6 +262,336 @@ def matfft(xr: jnp.ndarray, xi: jnp.ndarray, *,
             interpret=interpret,
             name=f"matfft_{n1}x{n2}",
         )(xr, xi, w1r, w1i, tr, ti, w2r, w2i, er, ei)
+
+    if pad:
+        yr, yi = yr[:rows], yi[:rows]
+    return yr, yi
+
+
+# ---------------------------------------------------------------------------
+# column-strided batch kernel (zero-copy four-step passes)
+
+
+def _col_kernel(*refs, direct: bool, n1: int, n2: int, cols: int,
+                col_tile: int, out_major: str, fuse_epilogue: bool,
+                global_n: int):
+    """DFT of ct columns of one (L, C) matrix: load (1, L, ct), transpose in
+    VMEM, transform, and store row-major or column-major."""
+    if direct:
+        (xr_ref, xi_ref, wr_ref, wi_ref,
+         er_ref, ei_ref, outr_ref, outi_ref) = refs
+    else:
+        (xr_ref, xi_ref, w1r_ref, w1i_ref, tr_ref, ti_ref, w2r_ref, w2i_ref,
+         er_ref, ei_ref, outr_ref, outi_ref) = refs
+
+    xr = xr_ref[...][0].T  # (1, L, ct) -> (ct, L): VMEM transpose, not HBM
+    xi = xi_ref[...][0].T
+    if direct:
+        yr, yi = _tile_dft_direct(xr, xi, wr_ref[...], wi_ref[...])
+    else:
+        yr, yi = _tile_dft_4step(xr, xi, w1r_ref[...], w1i_ref[...],
+                                 tr_ref[...], ti_ref[...],
+                                 w2r_ref[...], w2i_ref[...], n1=n1, n2=n2)
+
+    if global_n:
+        # logical row of this tile's first output = b*C + j*ct
+        row_base = (er_ref[0] + pl.program_id(0) * cols
+                    + pl.program_id(1) * col_tile)
+        tw_r, tw_i = _global_twiddle(row_base, yr.shape[0], yr.shape[1],
+                                     global_n)
+        yr, yi = _cmul(yr, yi, tw_r, tw_i)
+    elif fuse_epilogue:
+        yr, yi = _cmul(yr, yi, er_ref[...], ei_ref[...])
+
+    if out_major == "row":
+        outr_ref[...] = yr
+        outi_ref[...] = yi
+    else:
+        outr_ref[...] = yr.T[None]
+        outi_ref[...] = yi.T[None]
+
+
+def matfft_cols(xr: jnp.ndarray, xi: jnp.ndarray, *, out_major: str = "row",
+                epilogue: tuple[jnp.ndarray, jnp.ndarray] | None = None,
+                global_twiddle: tuple[int, jnp.ndarray] | None = None,
+                col_tile: int | None = None,
+                interpret: bool = True) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Batched forward DFT along the MIDDLE axis of planar (B, L, C) arrays.
+
+    Logical batch row r = b*C + c transforms the column x[b, :, c]. The
+    column-strided fetch and the transpose both happen at the BlockSpec /
+    VMEM level, so no transposed copy of the operand ever exists in HBM.
+
+    Args:
+      xr, xi: float32 (B, L, C) planes; L a pow2 <= plan.MAX_LEAF, C pow2.
+      out_major: "row" returns (B*C, L) row-major (row index b*C + c);
+        "col" returns (B, L, C) with out[b, o, c] — i.e. the result is
+        written back in column order, which is exactly the o2-major store
+        the four-step's final reorder needs.
+      epilogue: optional planar (C, L) table; output row (b, c) is
+        multiplied by ``epilogue[c]`` (period == C by construction).
+      global_twiddle: (n_global, row_off) — on-the-fly distributed twiddle
+        for logical row ``row_off + b*C + c`` (see _global_twiddle).
+      col_tile: columns per kernel instance (defaults to a VMEM-sized tile).
+    """
+    if xr.ndim != 3:
+        raise ValueError(f"matfft_cols expects 3-D (B, L, C), got {xr.shape}")
+    B, L, C = xr.shape
+    p = fft_plan.make_plan(L)
+    if p.levels != 1:
+        raise ValueError(f"L={L} exceeds single-kernel capacity")
+    if not fft_plan.is_pow2(C):
+        raise ValueError(f"column count must be a power of two, got {C}")
+    if out_major not in ("row", "col"):
+        raise ValueError(f"unknown out_major {out_major!r}")
+
+    ct = min(col_tile or default_batch_tile(L), C)
+    # round down to a power of two so ct always divides C (validated pow2):
+    # a ragged tile would leave trailing output blocks unwritten
+    ct = 1 << (ct.bit_length() - 1)
+    grid = (B, C // ct)
+
+    in_spec = pl.BlockSpec((1, L, ct), lambda b, j: (b, 0, j))
+
+    g_n = 0
+    if global_twiddle is not None:
+        assert epilogue is None
+        g_n, row_off = global_twiddle
+    fuse = epilogue is not None
+    if fuse:
+        er, ei = epilogue
+        if er.shape != (C, L):
+            raise ValueError(f"epilogue must be (C, L)=({C}, {L}), "
+                             f"got {er.shape}")
+        epi_spec = pl.BlockSpec((ct, L), lambda b, j: (j, 0))
+    elif g_n:
+        er = row_off.reshape(1).astype(jnp.int32)
+        ei = jnp.zeros((1,), jnp.int32)
+        epi_spec = pl.BlockSpec((1,), lambda b, j: (0,))
+    else:
+        er = ei = jnp.zeros((ct, L), jnp.float32)
+        epi_spec = pl.BlockSpec((ct, L), lambda b, j: (0, 0))
+
+    if out_major == "row":
+        out_shape = [jax.ShapeDtypeStruct((B * C, L), jnp.float32)] * 2
+        blocks_per_b = C // ct
+        out_spec = pl.BlockSpec((ct, L),
+                                lambda b, j: (b * blocks_per_b + j, 0))
+    else:
+        out_shape = [jax.ShapeDtypeStruct((B, L, C), jnp.float32)] * 2
+        out_spec = pl.BlockSpec((1, L, ct), lambda b, j: (b, 0, j))
+
+    def table_spec(shape):
+        return pl.BlockSpec(shape, lambda b, j: tuple(0 for _ in shape))
+
+    common = dict(cols=C, col_tile=ct, out_major=out_major,
+                  fuse_epilogue=fuse, global_n=g_n)
+    if L <= DIRECT_N:
+        wr, wi = (jnp.asarray(a) for a in fft_plan.dft_matrix(L))
+        kernel = functools.partial(_col_kernel, direct=True, n1=0, n2=0,
+                                   **common)
+        return pl.pallas_call(
+            kernel,
+            grid=grid,
+            in_specs=[in_spec, in_spec,
+                      table_spec((L, L)), table_spec((L, L)),
+                      epi_spec, epi_spec],
+            out_specs=[out_spec, out_spec],
+            out_shape=out_shape,
+            interpret=interpret,
+            name=f"dft_cols_{L}",
+        )(xr, xi, wr, wi, er, ei)
+
+    l1, l2 = p.n1, p.n2
+    w1r, w1i = (jnp.asarray(a) for a in fft_plan.dft_matrix(l1))
+    w2r, w2i = (jnp.asarray(a) for a in fft_plan.dft_matrix(l2))
+    tr, ti = (jnp.asarray(a.T.copy())
+              for a in fft_plan.twiddle_table(l1, l2, L))
+    kernel = functools.partial(_col_kernel, direct=False, n1=l1, n2=l2,
+                               **common)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[in_spec, in_spec,
+                  table_spec((l1, l1)), table_spec((l1, l1)),
+                  table_spec((l2, l1)), table_spec((l2, l1)),
+                  table_spec((l2, l2)), table_spec((l2, l2)),
+                  epi_spec, epi_spec],
+        out_specs=[out_spec, out_spec],
+        out_shape=out_shape,
+        interpret=interpret,
+        name=f"matfft_cols_{l1}x{l2}",
+    )(xr, xi, w1r, w1i, tr, ti, w2r, w2i, er, ei)
+
+
+def four_step_zero_copy(xr: jnp.ndarray, xi: jnp.ndarray, n1: int, n2: int,
+                        *, col_tile: int | None = None,
+                        interpret: bool = True
+                        ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Level-1 four-step with ZERO materialized transposes (DESIGN.md §3).
+
+    The legacy path reshapes+swapaxes three times between the two leaf
+    passes (to_cols / to_rows / out_order), each a full HBM read+write of
+    the whole signal. Here both passes are column-strided kernels over free
+    reshapes of the same buffers:
+
+      pass 1  x viewed (rows, n1, n2): FFT the n1-columns, outer twiddle
+              fused in the epilogue, output row-major (rows*n2, n1)
+      pass 2  that viewed (rows, n2, n1): FFT the n2-columns, output
+              written column-major — which IS the o2-major final order
+
+    HBM traffic: one read + one write per pass (4 traversals total) vs the
+    legacy 10; see plan.four_step_hbm_bytes.
+    """
+    rows, n = xr.shape
+    assert n == n1 * n2
+
+    # T[o1, i2] -> (i2, o1): pass-1 output row (b, i2) is multiplied by
+    # T^T[i2, :] — period n2 == the pass-1 column count, no O(batch*n)
+    # twiddle tensor.
+    tr, ti = fft_plan.twiddle_table(n1, n2, n)
+    epi = (jnp.asarray(tr.T.copy()), jnp.asarray(ti.T.copy()))
+
+    ar, ai = matfft_cols(xr.reshape(rows, n1, n2), xi.reshape(rows, n1, n2),
+                         out_major="row", epilogue=epi, col_tile=col_tile,
+                         interpret=interpret)  # (rows*n2, n1), row (b, i2)
+
+    cr, ci = matfft_cols(ar.reshape(rows, n2, n1), ai.reshape(rows, n2, n1),
+                         out_major="col", col_tile=col_tile,
+                         interpret=interpret)  # (rows, n2, n1) = [b, o2, o1]
+
+    return cr.reshape(rows, n), ci.reshape(rows, n)
+
+
+# ---------------------------------------------------------------------------
+# real-input fast path (rfft leaf)
+
+
+def untangle_half_spectrum(yr, yi, vr, vi):
+    """One-sided real-input spectrum from the half-length packed transform.
+
+    Given Y = DFT_m(x[..., 0::2] + 1j*x[..., 1::2]) along the last axis,
+    the even/odd sub-spectra are recovered from the conjugate-symmetric
+    partner Y[(m-k) % m] and combined with the packing twiddle
+    v[k] = W_{2m}^k:
+
+        E[k] = (Y[k] + conj(Y[m-k]))/2      O[k] = (Y[k] - conj(Y[m-k]))/2i
+        X[k] = E[k] + v[k]*O[k]   k < m;    X[m] = E[0] - O[0]  (Nyquist)
+
+    Pure jnp on (..., m) planes -> (..., m+1): runs fused inside
+    _rfft_kernel's epilogue at leaf sizes and as the host epilogue of the
+    level-1 rfft path (ops.rfft) — one implementation for both.
+    """
+    # conj partner p[k] = Y[(m-k) % m]: reverse then rotate right by one.
+    pr = jnp.roll(yr[..., ::-1], 1, axis=-1)
+    pi = jnp.roll(yi[..., ::-1], 1, axis=-1)
+    er, ei = 0.5 * (yr + pr), 0.5 * (yi - pi)
+    our, oui = 0.5 * (yi + pi), 0.5 * (pr - yr)
+    xr = er + vr * our - vi * oui
+    xi = ei + vr * oui + vi * our
+    nyq = er[..., :1] - our[..., :1]
+    return (jnp.concatenate([xr, nyq], axis=-1),
+            jnp.concatenate([xi, jnp.zeros_like(nyq)], axis=-1))
+
+
+def _rfft_kernel(*refs, direct: bool, n1: int, n2: int):
+    """Half-length DFT of packed real input + conjugate-symmetry untangle.
+
+    The input tile is the natural (bt, n) real block — lane-aligned in HBM;
+    the even/odd split into z[b, k] = x[b, 2k] + i*x[b, 2k+1] happens on
+    the tile in VMEM. After the half-length DFT the untangle
+    (untangle_half_spectrum) runs fused in the epilogue — the one-sided
+    (bt, m+1) spectrum is the only thing that ever leaves VMEM.
+    """
+    if direct:
+        (x_ref, wr_ref, wi_ref, vr_ref, vi_ref, outr_ref, outi_ref) = refs
+    else:
+        (x_ref, w1r_ref, w1i_ref, tr_ref, ti_ref, w2r_ref, w2i_ref,
+         vr_ref, vi_ref, outr_ref, outi_ref) = refs
+
+    x = x_ref[...]  # (bt, n) natural layout: pack in VMEM, never in HBM
+    z = x.reshape(x.shape[0], x.shape[1] // 2, 2)
+    zr, zi = z[:, :, 0], z[:, :, 1]
+    if direct:
+        yr, yi = _tile_dft_direct(zr, zi, wr_ref[...], wi_ref[...])
+    else:
+        yr, yi = _tile_dft_4step(zr, zi, w1r_ref[...], w1i_ref[...],
+                                 tr_ref[...], ti_ref[...],
+                                 w2r_ref[...], w2i_ref[...], n1=n1, n2=n2)
+
+    outr, outi = untangle_half_spectrum(yr, yi, vr_ref[...], vi_ref[...])
+    outr_ref[...] = outr
+    outi_ref[...] = outi
+
+
+def rfft_leaf(x: jnp.ndarray, *, batch_tile: int | None = None,
+              interpret: bool = True) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """One-sided spectrum of real (rows, n) input, n pow2 with n//2 a leaf
+    length. Returns planar (rows, n//2 + 1) arrays.
+
+    Costs one HALF-length DFT: the packing is a free reshape (the kernel
+    reads the real buffer directly), and the untangle runs in the kernel
+    epilogue — ~50% of the flops and HBM bytes of the complex path.
+    """
+    if x.ndim != 2:
+        raise ValueError(f"rfft_leaf expects 2-D (rows, n), got {x.shape}")
+    rows, n = x.shape
+    fft_plan.log2i(n)
+    if n < 4:
+        raise ValueError(f"rfft_leaf needs n >= 4, got {n}")
+    m = n // 2
+    p = fft_plan.make_plan(m)
+    if p.levels != 1:
+        raise ValueError(f"n={n} exceeds rfft_leaf capacity; use ops.rfft")
+
+    bt = batch_tile or default_batch_tile(m)
+    pad = (-rows) % bt
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    grid = (x.shape[0] // bt,)
+
+    in_spec = pl.BlockSpec((bt, n), lambda i: (i, 0))
+    out_spec = pl.BlockSpec((bt, m + 1), lambda i: (i, 0))
+    out_shape = [jax.ShapeDtypeStruct((x.shape[0], m + 1), jnp.float32)] * 2
+    vr, vi = (jnp.asarray(a) for a in fft_plan.rfft_twiddle(n))
+
+    def table_spec(shape):
+        return pl.BlockSpec(shape, lambda i: tuple(0 for _ in shape))
+
+    if m <= DIRECT_N:
+        wr, wi = (jnp.asarray(a) for a in fft_plan.dft_matrix(m))
+        kernel = functools.partial(_rfft_kernel, direct=True, n1=0, n2=0)
+        yr, yi = pl.pallas_call(
+            kernel,
+            grid=grid,
+            in_specs=[in_spec,
+                      table_spec((m, m)), table_spec((m, m)),
+                      table_spec((1, m)), table_spec((1, m))],
+            out_specs=[out_spec, out_spec],
+            out_shape=out_shape,
+            interpret=interpret,
+            name=f"rfft_direct_{n}",
+        )(x, wr, wi, vr, vi)
+    else:
+        m1, m2 = p.n1, p.n2
+        w1r, w1i = (jnp.asarray(a) for a in fft_plan.dft_matrix(m1))
+        w2r, w2i = (jnp.asarray(a) for a in fft_plan.dft_matrix(m2))
+        tr, ti = (jnp.asarray(a.T.copy())
+                  for a in fft_plan.twiddle_table(m1, m2, m))
+        kernel = functools.partial(_rfft_kernel, direct=False, n1=m1, n2=m2)
+        yr, yi = pl.pallas_call(
+            kernel,
+            grid=grid,
+            in_specs=[in_spec,
+                      table_spec((m1, m1)), table_spec((m1, m1)),
+                      table_spec((m2, m1)), table_spec((m2, m1)),
+                      table_spec((m2, m2)), table_spec((m2, m2)),
+                      table_spec((1, m)), table_spec((1, m))],
+            out_specs=[out_spec, out_spec],
+            out_shape=out_shape,
+            interpret=interpret,
+            name=f"rfft_{m1}x{m2}",
+        )(x, w1r, w1i, tr, ti, w2r, w2i, vr, vi)
 
     if pad:
         yr, yi = yr[:rows], yi[:rows]

@@ -68,6 +68,19 @@ def twiddle_table(n1: int, n2: int, n: int) -> tuple[np.ndarray, np.ndarray]:
 
 
 @functools.lru_cache(maxsize=None)
+def rfft_twiddle(n: int) -> tuple[np.ndarray, np.ndarray]:
+    """Planar packing twiddle v[k] = exp(-2j*pi*k/n), shape (1, n//2).
+
+    Combines the even/odd sub-spectra of the half-length packed transform
+    into the one-sided real-input spectrum (matfft._rfft_kernel).
+    """
+    k = np.arange(n // 2, dtype=np.float64)
+    ang = -2.0 * math.pi * k / n
+    return (np.cos(ang).astype(np.float32).reshape(1, -1),
+            np.sin(ang).astype(np.float32).reshape(1, -1))
+
+
+@functools.lru_cache(maxsize=None)
 def stockham_twiddles(n: int) -> tuple[np.ndarray, np.ndarray]:
     """Packed per-stage twiddles for the radix-2 Stockham kernel.
 
@@ -129,6 +142,51 @@ class FftPlan:
             return 4.0 * self.n * (self.n1 + self.n2)
         f1, f2 = split_pow2(self.n1), split_pow2(self.n2)
         return 4.0 * self.n * (f1[0] + f1[1] + f2[0] + f2[1])
+
+
+# ---------------------------------------------------------------------------
+# analytic HBM traffic counters (the roofline byte numerators; see DESIGN.md
+# §3-4 and benchmarks/bench_fft.py). All counts are planar-f32 payload bytes
+# per batch row, ignoring the O(table) twiddle/DFT-matrix operands.
+
+_F32 = 4  # bytes
+
+
+def fft_hbm_bytes(n: int, layout: str = "zero_copy",
+                  max_leaf: int = MAX_LEAF) -> int:
+    """HBM bytes moved per batch row by the complex transform.
+
+    levels == 1: one kernel pass — read 2 planes, write 2 planes.
+    levels == 2, zero_copy: two passes, each read+write (4 traversals).
+    levels == 2, copy (legacy): the three materialized transposes
+    (to_cols / to_rows / out_order) each add a full read+write on top.
+    """
+    p = make_plan(n, max_leaf)
+    plane = _F32 * n
+    per_pass = 2 * 2 * plane  # 2 planes in + 2 planes out
+    if p.levels == 1:
+        return per_pass
+    if layout == "zero_copy":
+        return 2 * per_pass
+    return 2 * per_pass + 3 * per_pass  # + transpose round-trips
+
+
+def rfft_hbm_bytes(n: int, max_leaf: int = MAX_LEAF) -> int:
+    """HBM bytes moved per batch row by the real-input fast path.
+
+    Leaf regime (n//2 a leaf length): the fused kernel reads the real
+    buffer once and writes the one-sided planar spectrum — nothing else
+    touches HBM. Level-1 regime: host pack + half-length zero-copy
+    transform + vectorized untangle.
+    """
+    m = n // 2
+    plane_n = _F32 * n
+    out_sided = 2 * _F32 * (m + 1)
+    if make_plan(m, max_leaf).levels == 1:
+        return plane_n + out_sided  # read real input, write spectrum
+    pack = plane_n + 2 * _F32 * m          # read x, write (zr, zi)
+    untangle = 2 * 2 * _F32 * m + out_sided  # read Y, write spectrum
+    return pack + fft_hbm_bytes(m, "zero_copy", max_leaf) + untangle
 
 
 def make_plan(n: int, max_leaf: int = MAX_LEAF) -> FftPlan:

@@ -32,7 +32,7 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import ARCHS, get_config
-from repro.launch.hlo_analysis import collective_stats
+from repro.launch.hlo_analysis import collective_stats, cost_analysis_dict
 from repro.launch.mesh import make_production_mesh
 from repro.launch.specs import SHAPES, cell_runnable, input_specs
 from repro.models.scanning import set_unroll
@@ -135,7 +135,7 @@ def build_lowered(arch: str, shape: str, mesh, rules: ShardingRules,
 
 
 def _cost_vector(compiled) -> dict:
-    cost = compiled.cost_analysis()
+    cost = cost_analysis_dict(compiled.cost_analysis())
     colls = collective_stats(compiled.as_text())
     vec = {
         "flops": cost.get("flops", 0.0),

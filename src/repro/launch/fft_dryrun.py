@@ -29,7 +29,7 @@ import jax.numpy as jnp
 from repro.core.fft import distributed
 from repro.core.fft.segmented import segmented_fft
 from repro.kernels.fft import ops as fft_ops
-from repro.launch.hlo_analysis import collective_stats
+from repro.launch.hlo_analysis import collective_stats, cost_analysis_dict
 from repro.launch.mesh import make_production_mesh
 
 PEAK, HBM, ICI = 197e12, 819e9, 50e9
@@ -38,7 +38,7 @@ PEAK, HBM, ICI = 197e12, 819e9, 50e9
 def measure(fn, args_abs, name):
     lowered = jax.jit(fn).lower(*args_abs)
     compiled = lowered.compile()
-    cost = compiled.cost_analysis()
+    cost = cost_analysis_dict(compiled.cost_analysis())
     mem = compiled.memory_analysis()
     colls = collective_stats(compiled.as_text())
     flops = cost.get("flops", 0.0)

@@ -1,0 +1,15 @@
+#!/usr/bin/env bash
+# Tier-1 test entry point (SNIPPETS idiom: ClashLuke/olmax test.sh).
+# Usage: bash test.sh [pytest args], e.g. `bash test.sh tests/test_kernels_fft.py -k rfft`
+set -euo pipefail
+cd "$(dirname "$0")"
+
+# https://github.com/tensorflow/tensorflow/blob/master/tensorflow/compiler/xla/xla.proto
+# Multi-device cases (tests/test_distributed_fft.py) re-export their own
+# count in a subprocess before importing jax; this default covers direct
+# runs of core/fft modules and keeps CI deterministic.
+export XLA_FLAGS="${XLA_FLAGS:---xla_force_host_platform_device_count=8}"
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+
+exec python -m pytest -x -q "$@"

@@ -17,12 +17,13 @@ _SCRIPT = textwrap.dedent("""
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import json
     import numpy as np, jax, jax.numpy as jnp
+    from repro import compat
     from repro.core.fft.distributed import distributed_fft, distributed_ifft, plan_distributed
     from repro.core.fft.segmented import segmented_fft
     from repro.kernels.fft import ops as fft_ops
     from jax.sharding import NamedSharding, PartitionSpec as P
 
-    mesh = jax.make_mesh((4, 2), ("data", "model"))
+    mesh = compat.make_mesh((4, 2), ("data", "model"))
     rng = np.random.default_rng(0)
     out = {}
 
@@ -63,9 +64,9 @@ _SCRIPT = textwrap.dedent("""
                                   - want).max() / np.abs(want).max())
     sh = NamedSharding(mesh, P(("data", "model"), None))
     spec = P(("data", "model"), None)
-    inner = jax.shard_map(lambda a, b: fft_ops.fft(a, b), mesh=mesh,
-                          in_specs=(spec, spec), out_specs=(spec, spec),
-                          check_vma=False)
+    inner = compat.shard_map(lambda a, b: fft_ops.fft(a, b), mesh=mesh,
+                             in_specs=(spec, spec), out_specs=(spec, spec),
+                             check_vma=False)
     txt = jax.jit(inner, in_shardings=(sh, sh), out_shardings=(sh, sh)).lower(
         jax.ShapeDtypeStruct((16, 512), jnp.float32),
         jax.ShapeDtypeStruct((16, 512), jnp.float32)).compile().as_text()

@@ -13,9 +13,14 @@ import jax.numpy as jnp
 import pytest
 
 from repro.configs import get_config
+from repro.launch.hlo_analysis import cost_analysis_dict
 from repro.models.scanning import set_unroll
 from repro.models.transformer import TransformerLM
 from repro.sharding.rules import abstract_params
+
+
+def _flops(compiled) -> float:
+    return cost_analysis_dict(compiled.cost_analysis())["flops"]
 
 
 def test_cost_analysis_scan_gap():
@@ -32,8 +37,8 @@ def test_cost_analysis_scan_gap():
             h = h @ h
         return h
 
-    fs = jax.jit(f_scan).lower(x).compile().cost_analysis()["flops"]
-    fu = jax.jit(f_unroll).lower(x).compile().cost_analysis()["flops"]
+    fs = _flops(jax.jit(f_scan).lower(x).compile())
+    fu = _flops(jax.jit(f_unroll).lower(x).compile())
     assert fu > 5 * fs  # scan undercounts ~10x
 
 
@@ -41,8 +46,7 @@ def _loss_flops(cfg, b=2, s=64):
     model = TransformerLM(cfg)
     params = abstract_params(model.param_specs())
     batch = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
-    c = jax.jit(model.loss).lower(params, batch).compile()
-    return c.cost_analysis()["flops"]
+    return _flops(jax.jit(model.loss).lower(params, batch).compile())
 
 
 @pytest.mark.parametrize("arch", ["qwen2-0.5b", "gemma3-1b"])
