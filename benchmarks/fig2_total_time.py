@@ -20,7 +20,7 @@ import jax.numpy as jnp
 from benchmarks.common import make_signal_store
 from repro.core.pipeline import (JobConfig, MapOnlyJob, block_of_segments,
                                  segments_of_block)
-from repro.kernels.fft import ops as fft_ops
+import repro.fft as fft_api
 
 SIZE_MB = 24
 FFT_LEN = 1024
@@ -35,7 +35,9 @@ def run_pipeline(store, out_dir, impl: str, fft_len: int, workers: int = 2):
         re, im = jnp.asarray(re), jnp.asarray(im)
         io_s[0] += time.monotonic() - t
         t = time.monotonic()
-        yr, yi = fft_ops.fft_jit(re, im, impl=impl)
+        p = fft_api.plan(kind="c2c", n=fft_len, batch_shape=re.shape[:-1],
+                         impl=impl)
+        yr, yi = p.execute(re, im)
         yr.block_until_ready()
         fft_s[0] += time.monotonic() - t
         t = time.monotonic()

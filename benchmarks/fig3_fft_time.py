@@ -12,7 +12,7 @@ import numpy as np
 import jax.numpy as jnp
 
 from benchmarks.common import timeit
-from repro.kernels.fft import ops as fft_ops
+import repro.fft as fft_api
 
 BATCH_ELEMS = 1 << 21  # ~2M complex samples in memory
 
@@ -28,8 +28,10 @@ def run(quick: bool = False):
         xi = jnp.asarray(rng.standard_normal((b, n)), jnp.float32)
         times = {}
         for impl in ("ref", "matfft", "stockham"):
-            def call(impl=impl):
-                yr, yi = fft_ops.fft_jit(xr, xi, impl=impl)
+            p = fft_api.plan(kind="c2c", n=n, batch_shape=(b,), impl=impl)
+
+            def call(p=p):
+                yr, yi = p.execute(xr, xi)
                 yr.block_until_ready()
             t = timeit(call, warmup=1, iters=3)
             times[impl] = t

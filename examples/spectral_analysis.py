@@ -19,6 +19,7 @@ from pathlib import Path
 import numpy as np
 import jax.numpy as jnp
 
+import repro.fft as fft_api
 from repro.core.pipeline import BlockStore, JobConfig, MapOnlyJob
 from repro.core.spectral import power_spectrogram
 
@@ -42,6 +43,17 @@ def synth_capture(seconds: float, seed: int = 0) -> np.ndarray:
 
 def main():
     x = synth_capture(seconds=8.0)
+
+    # inspect the r2c plan every map task's stft will cache-hit: the full
+    # strategy (rfft packing, fused untangle, byte/flop budget) is resolved
+    # before any data moves
+    frames_per_block = 1 + (SR - FRAME) // HOP
+    p = fft_api.plan(kind="r2c", n=FRAME, batch_shape=(frames_per_block,))
+    print(f"r2c plan: n={p.n} x{frames_per_block} frames/block, "
+          f"fused_untangle={p.fused_untangle}, "
+          f"{p.hbm_bytes_per_row} HBM bytes/frame, "
+          f"{p.flops / 1e6:.2f} MFLOP/block")
+
     with tempfile.TemporaryDirectory() as tmp:
         tmp = Path(tmp)
         store = BlockStore(tmp / "in", block_bytes=4 * SR, replication=2)  # 1s blocks

@@ -4,7 +4,7 @@ This implements the paper's §VI future work ("paralleling an FFT across a
 server cluster ... using RDMA") TPU-natively: the Hadoop cluster becomes a
 mesh axis (or a flattened tuple of axes, up to the full 512-chip multi-pod
 mesh), HDFS block exchange becomes `jax.lax.all_to_all` over ICI, and each
-"map task" runs the level-0/1 MXU kernels of kernels/fft/ops.py on its
+"map task" runs the level-0/1 MXU kernels of repro/fft/executors.py on its
 local shard.
 
 Data layout (N = N1 * N2 global points, D devices, planar re/im):
@@ -18,28 +18,31 @@ Data layout (N = N1 * N2 global points, D devices, planar re/im):
   a2a #3  (natural_order only) split o2, concat o1 -> contiguous output shard
 
 Constraints: N, N1, N2 powers of two with D | N1 and D | N2 (hence N >= D^2)
-— the standard constraint of transpose-based distributed FFTs. With the
+— the standard constraint of transpose-based distributed FFTs, validated up
+front by `repro.fft.spec` so it surfaces as a plan-time ValueError. With the
 512-chip mesh the minimum distributed transform is 2^18 points.
 
 Twiddle note: W_N^{i2*o1} exponents reach N1*N2 ~ 2^40+, far beyond f32
 integer precision. Since N is a power of two, `(i2 * o1) mod N` is computed
 exactly in uint32 wrap-around arithmetic (mod 2^32 then mask), keeping the
 twiddle angles exact for any N <= 2^32.
+
+`build_distributed` is the strategy builder the `repro.fft` planner
+consumes (the planner owns the single jit); `distributed_fft` remains as
+the historical entry point, now a thin wrapper over the facade.
 """
 
 from __future__ import annotations
 
 import math
 from dataclasses import dataclass
-from functools import partial
 
-import jax
 import jax.numpy as jnp
 from jax import lax
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro import compat
-from repro.kernels.fft import ops as fft_ops
+from repro.fft import executors as fft_ex
 from repro.kernels.fft import plan as fft_plan
 
 
@@ -81,29 +84,18 @@ def _twiddle(i2g: jnp.ndarray, o1: jnp.ndarray, n: int):
     return jnp.cos(ang), jnp.sin(ang)
 
 
-def distributed_fft(xr: jnp.ndarray, xi: jnp.ndarray, mesh: Mesh,
-                    axis_names=("data", "model"), *, impl: str = "matfft",
-                    natural_order: bool = True, fuse_twiddle: bool = False,
-                    interpret: bool | None = None,
-                    layout: str = "zero_copy"):
-    """Forward FFT of a single length-n planar signal sharded over ``mesh``.
+def build_distributed(n: int, mesh: Mesh, axis_names=("data", "model"), *,
+                      impl: str = "matfft", natural_order: bool = True,
+                      fuse_twiddle: bool = False,
+                      interpret: bool | None = None,
+                      layout: str = "zero_copy"):
+    """Build the shard_map'd cross-device four-step for a length-n signal.
 
-    Args:
-      xr, xi: (n,) float32 planes (global arrays; pjit/shard_map shards them
-        along the flattened ``axis_names``).
-      natural_order: if False, skip all_to_all #3 and return the transform
-        in transposed (o1-major) block order — FFTW's TRANSPOSED_OUT, useful
-        when a subsequent pointwise op + inverse FFT follows (convolution).
-      layout: "zero_copy" folds the local `.T` at each pass boundary into
-        the column-strided Pallas kernel (ops.fft_cols) — the all_to_all
-        already did the cross-device transpose, so no device-local
-        transposed copy is materialized either; "copy" keeps the legacy
-        materialized transposes (measured baseline).
-    Returns planar (n,) arrays, sharded like the input.
+    Returns the shard-mapped function over planar (n,) global arrays; the
+    caller (the planner) wraps it in ONE `jax.jit` and caches it.
     """
     if isinstance(axis_names, str):
         axis_names = (axis_names,)
-    n = xr.shape[-1]
     d = _axis_size(mesh, axis_names)
     plan = plan_distributed(n, d)
     n1, n2 = plan.n1, plan.n2
@@ -133,12 +125,12 @@ def distributed_fft(xr: jnp.ndarray, xi: jnp.ndarray, mesh: Mesh,
             # rows of this batch are i2-local, so the kernel's global row
             # offset is didx*n2l; the table is never materialized in HBM
             row_off = (didx * n2l).astype(jnp.int32).reshape(1)
-            br, bi = fft_ops.fft_cols(ar, ai, impl=impl, interpret=interpret,
-                                      global_twiddle=(n, row_off),
-                                      layout=layout)
+            br, bi = fft_ex.fft_cols(ar, ai, impl=impl, interpret=interpret,
+                                     global_twiddle=(n, row_off),
+                                     layout=layout)
         else:
-            ar, ai = fft_ops.fft_cols(ar, ai, impl=impl, interpret=interpret,
-                                      layout=layout)
+            ar, ai = fft_ex.fft_cols(ar, ai, impl=impl, interpret=interpret,
+                                     layout=layout)
             # ar: (n2l, n1), rows = local i2, cols = o1
             # ---- twiddle W_n^{i2_global * o1}, computed on the fly ----
             i2g = didx * n2l + jnp.arange(n2l, dtype=jnp.uint32)
@@ -150,8 +142,8 @@ def distributed_fft(xr: jnp.ndarray, xi: jnp.ndarray, mesh: Mesh,
         br, bi = a2a(br), a2a(bi)
 
         # ---- pass 2: FFT rows (length n2), batched over n1l ----
-        cr, ci = fft_ops.fft_cols(br, bi, impl=impl, interpret=interpret,
-                                  layout=layout)
+        cr, ci = fft_ex.fft_cols(br, bi, impl=impl, interpret=interpret,
+                                 layout=layout)
         # cr: (n1l, n2), rows = local o1, cols = o2
 
         if not natural_order:
@@ -164,9 +156,40 @@ def distributed_fft(xr: jnp.ndarray, xi: jnp.ndarray, mesh: Mesh,
 
     spec = P(ax)
     # check_vma=False: pallas_call out_shapes do not carry vma metadata.
-    fn = compat.shard_map(local, mesh=mesh, in_specs=(spec, spec),
-                          out_specs=(spec, spec), check_vma=False)
-    return fn(xr, xi)
+    return compat.shard_map(local, mesh=mesh, in_specs=(spec, spec),
+                            out_specs=(spec, spec), check_vma=False)
+
+
+def distributed_fft(xr: jnp.ndarray, xi: jnp.ndarray, mesh: Mesh,
+                    axis_names=("data", "model"), *, impl: str = "matfft",
+                    natural_order: bool = True, fuse_twiddle: bool = False,
+                    interpret: bool | None = None,
+                    layout: str = "zero_copy"):
+    """Forward FFT of a single length-n planar signal sharded over ``mesh``.
+
+    Args:
+      xr, xi: (n,) float32 planes (global arrays; pjit/shard_map shards them
+        along the flattened ``axis_names``).
+      natural_order: if False, skip all_to_all #3 and return the transform
+        in transposed (o1-major) block order — FFTW's TRANSPOSED_OUT, useful
+        when a subsequent pointwise op + inverse FFT follows (convolution).
+      layout: "zero_copy" folds the local `.T` at each pass boundary into
+        the column-strided Pallas kernel (fft_cols) — the all_to_all
+        already did the cross-device transpose, so no device-local
+        transposed copy is materialized either; "copy" keeps the legacy
+        materialized transposes (measured baseline).
+    Returns planar (n,) arrays, sharded like the input.
+
+    Thin wrapper over `repro.fft.plan(placement="distributed")`: repeat
+    calls with the same spec hit the plan cache and reuse the compiled
+    callable.
+    """
+    import repro.fft as fft_api
+    p = fft_api.plan(kind="c2c", n=xr.shape[-1], batch_shape=(), mesh=mesh,
+                     placement="distributed", axes=axis_names, impl=impl,
+                     natural_order=natural_order, fuse_twiddle=fuse_twiddle,
+                     interpret=interpret, layout=layout)
+    return p.execute(xr, xi)
 
 
 def distributed_ifft(xr, xi, mesh, axis_names=("data", "model"), **kw):

@@ -9,15 +9,59 @@ the level-0/1 kernels per shard. There are NO collectives in this path —
 `out_shardings == in_shardings` — which is the whole point of the paper's
 map-only design, and what the dry-run verifies (the compiled HLO for this
 op contains zero collective ops; see tests/test_distributed_fft.py).
+
+`build_segmented` is the strategy builder the `repro.fft` planner consumes:
+it returns the shard_map'd kernel plus the jit shardings, and the planner
+owns the jit — so the compiled callable lives in the process-level plan
+cache instead of being rebuilt per call. `segmented_fft` remains as the
+historical entry point, now a thin wrapper that builds-and-executes a plan.
 """
 
 from __future__ import annotations
 
-import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro import compat
-from repro.kernels.fft import ops as fft_ops
+from repro.fft import executors as fft_ex
+
+
+def build_segmented(mesh: Mesh, batch_axes, *, kind: str = "c2c",
+                    impl: str = "matfft", interpret: bool | None = None,
+                    layout: str = "zero_copy"):
+    """Build the map-only shard_map kernel for a (batch, n) segment batch.
+
+    Returns ``(inner, in_shardings, out_shardings)``; the caller (the
+    planner) wraps ``inner`` in ONE `jax.jit` and caches it. kind="c2c"
+    maps planar (xr, xi) -> (yr, yi); kind="r2c" maps real x -> the planar
+    one-sided (batch, n//2 + 1) spectrum, still with zero collectives.
+    """
+    batch_axes = tuple(a for a in batch_axes if a in mesh.shape)
+    spec = P(batch_axes, None)
+    sharding = NamedSharding(mesh, spec)
+
+    if kind == "c2c":
+        def f(xr, xi):
+            return fft_ex.fft(xr, xi, impl=impl, interpret=interpret,
+                              layout=layout)
+        in_specs, out_specs = (spec, spec), (spec, spec)
+        in_sh, out_sh = (sharding, sharding), (sharding, sharding)
+    elif kind == "r2c":
+        def f(x):
+            return fft_ex.rfft(x, impl=impl, interpret=interpret,
+                               layout=layout)
+        in_specs, out_specs = (spec,), (spec, spec)
+        in_sh, out_sh = (sharding,), (sharding, sharding)
+    else:
+        raise ValueError(f"unknown kind {kind!r} for segmented placement")
+
+    # shard_map (not bare pjit): XLA cannot partition through an opaque
+    # pallas_call, so auto-sharding would insert all-gathers — the exact
+    # failure mode the paper's map-only design exists to avoid. shard_map
+    # pins one program instance per shard; the compiled HLO has zero
+    # collectives (asserted in tests).
+    inner = compat.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    return inner, in_sh, out_sh
 
 
 def segmented_fft(xr, xi, mesh: Mesh, batch_axes=("pod", "data", "model"), *,
@@ -28,22 +72,14 @@ def segmented_fft(xr, xi, mesh: Mesh, batch_axes=("pod", "data", "model"), *,
     Each device transforms its own rows — one "map task" per shard, no
     reduce phase. Lengths up to MAX_LEAF**2 per segment (level-1 local
     four-step, zero-copy by default); longer single transforms need
-    distributed_fft.
+    distributed placement.
+
+    Thin wrapper over `repro.fft.plan(placement="segmented")`: repeat calls
+    with the same batch/length/mesh hit the plan cache and reuse the
+    compiled callable.
     """
-    batch_axes = tuple(a for a in batch_axes if a in mesh.shape)
-    spec = P(batch_axes, None)
-    sharding = NamedSharding(mesh, spec)
-
-    def f(xr, xi):
-        return fft_ops.fft(xr, xi, impl=impl, interpret=interpret,
-                           layout=layout)
-
-    # shard_map (not bare pjit): XLA cannot partition through an opaque
-    # pallas_call, so auto-sharding would insert all-gathers — the exact
-    # failure mode the paper's map-only design exists to avoid. shard_map
-    # pins one program instance per shard; the compiled HLO has zero
-    # collectives (asserted in tests).
-    inner = compat.shard_map(f, mesh=mesh, in_specs=(spec, spec),
-                             out_specs=(spec, spec), check_vma=False)
-    return jax.jit(inner, in_shardings=(sharding, sharding),
-                   out_shardings=(sharding, sharding))(xr, xi)
+    import repro.fft as fft_api
+    p = fft_api.plan(kind="c2c", n=xr.shape[-1], batch_shape=xr.shape[:-1],
+                     mesh=mesh, placement="segmented", axes=batch_axes,
+                     impl=impl, interpret=interpret, layout=layout)
+    return p.execute(xr, xi)

@@ -9,6 +9,12 @@ These are the framework-level consumers of the paper's technique:
     inapplicable there — DESIGN.md §5);
   * ``SpectralMixer`` — FNet-style token mixing, the optional beyond-paper
     integration of the FFT into transformer blocks (ablation in examples/).
+
+Every transform goes through the `repro.fft` plan-and-execute facade
+(DESIGN.md §6): the r2c/c2c plans behind a given frame/pad length are
+resolved and compiled once in the process-level plan cache, so a
+spectrogram job over thousands of identical blocks pays plan construction
+exactly once — the paper's amortized-`cufftPlanMany` property.
 """
 
 from __future__ import annotations
@@ -19,7 +25,7 @@ import math
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.fft import ops as fft_ops
+import repro.fft as fft_api
 
 
 @functools.lru_cache(maxsize=None)
@@ -46,7 +52,9 @@ def stft(x: jnp.ndarray, frame: int = 1024, hop: int = 512, *,
     frames = frame_signal(x.astype(jnp.float32), frame, hop)
     if window:
         frames = frames * jnp.asarray(_hann(frame))
-    return fft_ops.rfft(frames, impl=impl, interpret=interpret)
+    p = fft_api.plan(kind="r2c", n=frame, batch_shape=frames.shape[:-1],
+                     impl=impl, interpret=interpret)
+    return p.execute_real(frames)
 
 
 def power_spectrogram(x, frame=1024, hop=512, **kw):
@@ -71,13 +79,17 @@ def fft_conv(x: jnp.ndarray, kernel: jnp.ndarray, *, impl: str = "matfft",
     xp = jnp.pad(x.astype(jnp.float32), [(0, 0)] * (x.ndim - 1) + [(0, n - t)])
     kp = jnp.pad(kernel.astype(jnp.float32), (0, n - tk))
     # Both operands are real: multiply one-sided rfft spectra (conjugate
-    # symmetry survives the product) and invert with irfft — every
-    # transform runs at half length.
-    xr, xi = fft_ops.rfft(xp, impl=impl, interpret=interpret)
-    kr, ki = fft_ops.rfft(kp, impl=impl, interpret=interpret)
+    # symmetry survives the product) and invert with the r2c plan's
+    # inverse — every transform runs at half length.
+    px = fft_api.plan(kind="r2c", n=n, batch_shape=xp.shape[:-1],
+                      impl=impl, interpret=interpret)
+    pk = fft_api.plan(kind="r2c", n=n, batch_shape=kp.shape[:-1],
+                      impl=impl, interpret=interpret)
+    xr, xi = px.execute_real(xp)
+    kr, ki = pk.execute_real(kp)
     pr = xr * kr - xi * ki
     pi = xr * ki + xi * kr
-    yr = fft_ops.irfft(pr, pi, impl=impl, interpret=interpret)
+    yr = px.execute_inverse(pr, pi)
     return yr[..., :t]
 
 
@@ -88,8 +100,14 @@ def spectral_mixer(x: jnp.ndarray, *, impl: str = "matfft",
     Requires seq and d to be powers of two in kernel mode; callers pad.
     """
     z = jnp.zeros_like(x)
-    hr, hi = fft_ops.fft(x, z, impl=impl, interpret=interpret)  # over d
+    p_hidden = fft_api.plan(kind="c2c", n=x.shape[-1],
+                            batch_shape=x.shape[:-1], impl=impl,
+                            interpret=interpret)
+    hr, hi = p_hidden.execute(x, z)  # over d
     hr = jnp.swapaxes(hr, -1, -2)
     hi = jnp.swapaxes(hi, -1, -2)
-    sr, _ = fft_ops.fft(hr, hi, impl=impl, interpret=interpret)  # over seq
+    p_seq = fft_api.plan(kind="c2c", n=hr.shape[-1],
+                         batch_shape=hr.shape[:-1], impl=impl,
+                         interpret=interpret)
+    sr, _ = p_seq.execute(hr, hi)  # over seq
     return jnp.swapaxes(sr, -1, -2)

@@ -1,0 +1,36 @@
+"""`repro.fft` — the plan-and-execute FFT facade.
+
+One entry point for every transform in the reproduction, mirroring the
+paper's plan-then-execute discipline (`cufftPlanMany` built once per block
+size, reused across every map task):
+
+    import repro.fft
+
+    p = repro.fft.plan(kind="r2c", n=4096, batch_shape=(1024,))
+    yr, yi = p.execute_real(x)        # compiled once, cached process-wide
+    p.hbm_bytes, p.gemm_macs, p.flops # analytic roofline cost model
+    p.fused_untangle                  # resolved strategy, inspectable
+
+Placements scale the same call from one core to the full mesh:
+"local" (level-0/1 kernels), "segmented" (the paper's map-only regime,
+zero collectives), "distributed" (cross-device four-step over all_to_all);
+"auto" picks from n, batch_shape, and mesh size.
+
+The deprecated per-call entry points (`repro.kernels.fft.ops.fft` etc.)
+are thin shims over this facade. Smoke-check with
+``python -m repro.fft.selftest``.
+"""
+
+from repro.fft.planner import (ExecutablePlan, cache_info, clear_plan_cache,
+                               plan)
+from repro.fft.spec import MAX_LOCAL_N, FftSpec, resolve_placement
+
+__all__ = [
+    "ExecutablePlan",
+    "FftSpec",
+    "MAX_LOCAL_N",
+    "cache_info",
+    "clear_plan_cache",
+    "plan",
+    "resolve_placement",
+]

@@ -1,0 +1,264 @@
+"""Execution bodies behind `repro.fft` plans: the level-0/1 transform code.
+
+This module is the *mechanism* layer of the plan-and-execute facade: plain
+functions over planar float32 arrays that drive the Pallas kernels
+(`kernels/fft/matfft.py`, `kernels/fft/stockham.py`). It holds what used to
+be the bodies of `kernels.fft.ops` before the facade existed; `ops.*` is
+now a set of deprecated shims over `repro.fft.plan`.
+
+Hierarchy (mirrors the paper's block decomposition, DESIGN.md §2):
+
+  level 0  (VMEM/MXU)   matfft kernel, n <= plan.MAX_LEAF
+  level 1  (HBM, here)  host four-step n = n1*n2, leaf = level 0, with the
+                        outer twiddle FUSED into the first leaf's epilogue
+  level 2  (ICI)        cross-device four-step — core/fft/distributed.py,
+                        which calls back into these executors for local work
+
+The ``layout`` option selects how level-1 pass boundaries move data
+(DESIGN.md §3):
+
+  "zero_copy" (default)  column-strided Pallas kernels read/write the
+                         natural buffers directly; no transposed tensor is
+                         ever materialized in HBM
+  "copy"                 the legacy reshape+swapaxes path, kept as the
+                         measured baseline (benchmarks/bench_fft.py) and
+                         as the fallback for non-matfft leaf impls
+
+``interpret=None`` auto-selects interpret mode off-TPU so the same code
+runs on this CPU container and on real hardware.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.fft import plan as fft_plan
+from repro.kernels.fft import ref as fft_ref
+from repro.kernels.fft.matfft import (four_step_zero_copy, matfft,
+                                      matfft_cols, rfft_leaf,
+                                      untangle_half_spectrum)
+from repro.kernels.fft.stockham import stockham_fft
+
+Planar = tuple[jnp.ndarray, jnp.ndarray]
+
+
+def _auto_interpret(interpret: bool | None) -> bool:
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret
+
+
+def _leaf(xr, xi, impl: str, interpret: bool, epilogue=None, batch_tile=None):
+    if impl == "matfft":
+        return matfft(xr, xi, epilogue=epilogue, batch_tile=batch_tile,
+                      interpret=interpret)
+    if impl == "stockham":
+        if epilogue is not None:
+            yr, yi = stockham_fft(xr, xi, batch_tile=batch_tile,
+                                  interpret=interpret)
+            er, ei = epilogue
+            period = er.shape[0]
+            rows = yr.shape[0]
+            er = jnp.tile(er, (rows // period, 1))
+            ei = jnp.tile(ei, (rows // period, 1))
+            return yr * er - yi * ei, yr * ei + yi * er
+        return stockham_fft(xr, xi, batch_tile=batch_tile, interpret=interpret)
+    if impl == "ref":
+        yr, yi = fft_ref.fft_ref(xr, xi)
+        if epilogue is not None:
+            er, ei = epilogue
+            period = er.shape[0]
+            er = jnp.tile(er, (yr.shape[0] // period, 1))
+            ei = jnp.tile(ei, (yr.shape[0] // period, 1))
+            return yr * er - yi * ei, yr * ei + yi * er
+        return yr, yi
+    raise ValueError(f"unknown fft impl {impl!r}")
+
+
+def fft(xr: jnp.ndarray, xi: jnp.ndarray, *, impl: str = "matfft",
+        interpret: bool | None = None, batch_tile: int | None = None,
+        global_twiddle=None, layout: str = "zero_copy") -> Planar:
+    """Batched forward FFT along the last axis of planar float32 arrays.
+
+    Any leading batch shape; last-axis length must be a power of two up to
+    MAX_LEAF**2 (single device). Larger transforms go through
+    core/fft/distributed.py.
+    """
+    if layout not in ("zero_copy", "copy"):
+        raise ValueError(f"unknown layout {layout!r}")
+    interpret = _auto_interpret(interpret)
+    batch_shape, n = xr.shape[:-1], xr.shape[-1]
+    if n == 1:
+        return xr, xi
+    fft_plan.log2i(n)
+    rows = 1
+    for d in batch_shape:
+        rows *= d
+    xr2 = xr.reshape(rows, n)
+    xi2 = xi.reshape(rows, n)
+
+    p = fft_plan.make_plan(n)
+    if p.levels == 1:
+        if global_twiddle is not None and impl == "matfft":
+            # fused distributed twiddle (core/fft/distributed.py): computed
+            # on the fly in the kernel epilogue, no HBM table
+            yr, yi = matfft(xr2, xi2, global_twiddle=global_twiddle,
+                            batch_tile=batch_tile,
+                            interpret=_auto_interpret(interpret))
+        else:
+            yr, yi = _leaf(xr2, xi2, impl, interpret, batch_tile=batch_tile)
+    else:
+        if global_twiddle is not None:
+            raise ValueError("global_twiddle requires a single-level plan")
+        yr, yi = _four_step(xr2, xi2, p.n1, p.n2, impl, interpret, batch_tile,
+                            layout)
+    return yr.reshape(*batch_shape, n), yi.reshape(*batch_shape, n)
+
+
+def _four_step(xr, xi, n1: int, n2: int, impl: str, interpret: bool,
+               batch_tile: int | None, layout: str = "zero_copy") -> Planar:
+    """Host-level four-step: two batched leaf passes.
+
+    layout="zero_copy" (matfft only): both passes are column-strided Pallas
+    kernels over free reshapes of the same buffers — no transposed tensor
+    is ever materialized (matfft.four_step_zero_copy).
+
+    layout="copy": the legacy path — three reshape+swapaxes transposes
+    around two row-major leaf passes, each a full HBM round-trip. Pass 1
+    still fuses the outer twiddle W_N^{o1*i2} into the leaf epilogue: the
+    epilogue operand is just the (n2, n1) table indexed periodically — no
+    O(batch*n) twiddle tensor is ever materialized.
+    """
+    rows, n = xr.shape
+    assert n == n1 * n2
+
+    if layout == "zero_copy" and impl == "matfft":
+        return four_step_zero_copy(xr, xi, n1, n2, col_tile=batch_tile,
+                                   interpret=interpret)
+
+    # T[o1, i2] -> transpose to (i2, o1): row (b, i2) of pass-1 output gets
+    # multiplied by T^T[i2, :]. Periodic with period n2 in the row index.
+    tr, ti = fft_plan.twiddle_table(n1, n2, n)
+    epi = (jnp.asarray(tr.T.copy()), jnp.asarray(ti.T.copy()))
+
+    def to_cols(a):  # (rows, n1*n2) -> (rows*n2, n1)
+        return a.reshape(rows, n1, n2).swapaxes(1, 2).reshape(rows * n2, n1)
+
+    ar, ai = _leaf(to_cols(xr), to_cols(xi), impl, interpret,
+                   epilogue=epi, batch_tile=batch_tile)
+
+    def to_rows(a):  # (rows*n2, n1) -> (rows*n1, n2)
+        return a.reshape(rows, n2, n1).swapaxes(1, 2).reshape(rows * n1, n2)
+
+    cr, ci = _leaf(to_rows(ar), to_rows(ai), impl, interpret,
+                   batch_tile=batch_tile)
+
+    def out_order(a):  # rows (b, o1), cols o2 -> flat o = o2*n1 + o1
+        return a.reshape(rows, n1, n2).swapaxes(1, 2).reshape(rows, n)
+
+    return out_order(cr), out_order(ci)
+
+
+def fft_cols(xr: jnp.ndarray, xi: jnp.ndarray, *, impl: str = "matfft",
+             interpret: bool | None = None, col_tile: int | None = None,
+             global_twiddle=None, layout: str = "zero_copy") -> Planar:
+    """FFT each COLUMN of planar (L, C) arrays; returns (C, L) row-major.
+
+    Semantically ``fft(xr.T, xi.T)``, but with layout="zero_copy" the
+    column-strided Pallas kernel reads the operand in place and writes
+    row-major output directly — the materialized `.T` copies at
+    distributed-FFT pass boundaries fold into the kernel (DESIGN.md §3).
+    """
+    interpret_b = _auto_interpret(interpret)
+    L, C = xr.shape
+    if (layout == "zero_copy" and impl == "matfft" and L > 1
+            and fft_plan.is_pow2(C)
+            and fft_plan.make_plan(L).levels == 1):
+        return matfft_cols(xr.reshape(1, L, C), xi.reshape(1, L, C),
+                           out_major="row", global_twiddle=global_twiddle,
+                           col_tile=col_tile, interpret=interpret_b)
+    # fallback materializes the transpose; the columns become batch rows,
+    # so the caller's tile request carries over as batch_tile
+    return fft(xr.T, xi.T, impl=impl, interpret=interpret,
+               batch_tile=col_tile, global_twiddle=global_twiddle,
+               layout=layout)
+
+
+def ifft(xr: jnp.ndarray, xi: jnp.ndarray, **kw) -> Planar:
+    """Inverse FFT via the conjugation identity: ifft(x) = conj(fft(conj(x)))/n."""
+    n = xr.shape[-1]
+    yr, yi = fft(xr, -xi, **kw)
+    return yr / n, -yi / n
+
+
+def rfft(x: jnp.ndarray, *, impl: str = "matfft",
+         interpret: bool | None = None, batch_tile: int | None = None,
+         layout: str = "zero_copy") -> Planar:
+    """Real-input FFT; returns planar one-sided spectrum (n//2 + 1 bins).
+
+    Fast path (impl="matfft", n >= 4): n real samples are packed as n/2
+    complex points by a FREE reshape, one half-length transform runs on the
+    MXU, and the conjugate-symmetric spectrum is untangled in the kernel
+    epilogue (leaf sizes) or a vectorized jnp epilogue (level-1 sizes) —
+    ~half the flops and HBM bytes of fft()+slice (DESIGN.md §4).
+    """
+    n = x.shape[-1]
+    x = x.astype(jnp.float32)
+    if n < 4 or impl != "matfft":
+        # legacy path: full complex transform, slice the half spectrum
+        yr, yi = fft(x, jnp.zeros_like(x), impl=impl, interpret=interpret,
+                     batch_tile=batch_tile, layout=layout)
+        return yr[..., : n // 2 + 1], yi[..., : n // 2 + 1]
+    fft_plan.log2i(n)
+    m = n // 2
+    batch_shape = x.shape[:-1]
+    rows = 1
+    for d in batch_shape:
+        rows *= d
+    x2 = x.reshape(rows, n)
+    if fft_plan.make_plan(m).levels == 1:
+        yr, yi = rfft_leaf(x2, batch_tile=batch_tile,
+                           interpret=_auto_interpret(interpret))
+    else:
+        # level-1: the untangle can't live inside one leaf tile (bin o
+        # pairs with m - o, a different o1-block), so pack + untangle run
+        # as host epilogues around the half-length zero-copy transform
+        z = x2.reshape(rows, m, 2)
+        zr, zi = fft(z[..., 0], z[..., 1], impl=impl, interpret=interpret,
+                     batch_tile=batch_tile, layout=layout)
+        vr, vi = (jnp.asarray(a) for a in fft_plan.rfft_twiddle(n))
+        yr, yi = untangle_half_spectrum(zr, zi, vr, vi)
+    return yr.reshape(*batch_shape, m + 1), yi.reshape(*batch_shape, m + 1)
+
+
+def irfft(yr: jnp.ndarray, yi: jnp.ndarray, *, impl: str = "matfft",
+          interpret: bool | None = None, batch_tile: int | None = None,
+          layout: str = "zero_copy") -> jnp.ndarray:
+    """Inverse of rfft: one-sided (..., n//2 + 1) spectrum -> real (..., n).
+
+    Runs the packing trick in reverse: re-entangle the even/odd sub-spectra
+    into a half-length spectrum, one half-length inverse transform, then
+    interleave — the same ~2x saving as the forward fast path.
+    """
+    m = yr.shape[-1] - 1
+    n = 2 * m
+    if m < 2 or impl != "matfft":
+        # legacy path: mirror to the full spectrum, full inverse transform
+        fr = jnp.concatenate([yr, yr[..., -2:0:-1]], axis=-1)
+        fi = jnp.concatenate([yi, -yi[..., -2:0:-1]], axis=-1)
+        zr, _ = ifft(fr, fi, impl=impl, interpret=interpret,
+                     batch_tile=batch_tile, layout=layout)
+        return zr
+    # E[k] = (X[k] + conj(X[m-k]))/2 ; O[k] = conj(v[k])*(X[k] - conj(X[m-k]))/2
+    xr_, xi_ = yr[..., :m], yi[..., :m]
+    pr, pi = yr[..., :0:-1], -yi[..., :0:-1]  # conj(X[m-k]), k = 0..m-1
+    er, ei = 0.5 * (xr_ + pr), 0.5 * (xi_ + pi)
+    dr, di = 0.5 * (xr_ - pr), 0.5 * (xi_ - pi)
+    vr, vi = (jnp.asarray(a) for a in fft_plan.rfft_twiddle(n))
+    our = vr * dr + vi * di  # conj(v) * D
+    oui = vr * di - vi * dr
+    # Z = E + i*O, z = IDFT_m(Z), x[2k] = Re z[k], x[2k+1] = Im z[k]
+    zr, zi = ifft(er - oui, ei + our, impl=impl, interpret=interpret,
+                  batch_tile=batch_tile, layout=layout)
+    return jnp.stack([zr, zi], axis=-1).reshape(*zr.shape[:-1], n)

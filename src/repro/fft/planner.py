@@ -1,0 +1,450 @@
+"""`repro.fft.plan` — cached executable plans (the `cufftPlanMany` analogue).
+
+The paper builds one batched CUFFT plan per block size and reuses it across
+every 512 MB map task; this module is the TPU translation. `plan(...)`
+resolves the full strategy up front (spec.py), then returns a frozen
+`ExecutablePlan` from a process-level cache keyed on the resolved spec +
+mesh — so the jit'd callable and twiddle tables behind a given spec are
+built exactly once, and repeat `execute` calls on the same spec trigger
+zero retraces (`plan.trace_count` stays at 1; asserted in
+tests/test_fft_plan_api.py and reported by benchmarks/bench_fft.py).
+
+An `ExecutablePlan` carries:
+
+  * the resolved `FftSpec` and the level-0/1 factorization (`plan.leaf`)
+    plus, for distributed placement, the cross-device `DistPlan`;
+  * the analytic cost model: `flops`, `gemm_macs`, `hbm_bytes` (folding the
+    roofline byte counters `fft_hbm_bytes`/`rfft_hbm_bytes`), and
+    `collective_bytes` for the distributed all_to_alls;
+  * `execute(xr, xi)` / `execute_real(x)` / `execute_inverse(...)`,
+    backed by lazily-built, id-stable jit'd callables. When called under an
+    outer trace (e.g. from a deprecated `ops.*` shim inside `jax.jit`) the
+    raw function is inlined instead, so plans stay transparent to jaxpr
+    inspection and to the caller's own compilation cache.
+"""
+
+from __future__ import annotations
+
+import math
+import threading
+
+import jax
+
+from repro.fft import executors
+from repro.fft import spec as spec_mod
+from repro.fft.spec import FftSpec
+from repro.kernels.fft import plan as kplan
+
+_F32 = 4  # bytes per planar float32 element
+
+_PLAN_CACHE: dict = {}
+_CACHE_INFO = {"hits": 0, "misses": 0}
+# map-only jobs plan() from ThreadPoolExecutor workers (core/pipeline):
+# the check-then-act on the cache must be atomic or the first same-shaped
+# blocks each build (and later compile) their own plan
+_CACHE_LOCK = threading.Lock()
+
+
+def _is_tracer(*arrays) -> bool:
+    return any(isinstance(a, jax.core.Tracer) for a in arrays)
+
+
+class ExecutablePlan:
+    """Frozen plan: resolved strategy + cost model + cached executables.
+
+    Construct via `repro.fft.plan(...)`, never directly — the module-level
+    cache is what makes repeat plans free.
+    """
+
+    def __init__(self, spec: FftSpec, mesh):
+        object.__setattr__(self, "_frozen", False)
+        self.spec = spec
+        self.mesh = mesh
+        # RLock: _build_inverse runs under it and re-enters via _forward()
+        self._build_lock = threading.RLock()
+        # r2c fast path packs n reals as n/2 complex (DESIGN.md §4)
+        self._fast_r2c = (spec.kind == "r2c" and spec.impl == "matfft"
+                          and spec.n >= 4)
+        #: cross-device plan (distributed placement only)
+        self.dist = None
+        if spec.placement == "distributed":
+            from repro.core.fft.distributed import plan_distributed
+            num_devices = math.prod(mesh.shape[a] for a in spec.axes)
+            self.dist = plan_distributed(spec.n, num_devices)
+            # the local factorization covers the longest per-device pass —
+            # global n can exceed MAX_LEAF**2 (up to 2^32), each pass can't
+            local_n = max(self.dist.n1, self.dist.n2)
+        else:
+            local_n = spec.n // 2 if self._fast_r2c else spec.n
+        #: level-0/1 factorization of the per-device transform
+        self.leaf = kplan.make_plan(max(local_n, 1))
+        self._traces = {"forward": 0, "inverse": 0}
+        self._fwd = None  # (inner, jitted), built lazily
+        self._inv = None
+        object.__setattr__(self, "_frozen", True)
+
+    def __setattr__(self, name, value):
+        if getattr(self, "_frozen", False) and not name.startswith("_"):
+            raise AttributeError(
+                f"ExecutablePlan is frozen; cannot set {name!r}")
+        object.__setattr__(self, name, value)
+
+    def __repr__(self):
+        s = self.spec
+        return (f"ExecutablePlan(kind={s.kind!r}, n={s.n}, "
+                f"batch_shape={s.batch_shape}, placement={s.placement!r}, "
+                f"layout={s.layout!r}, impl={s.impl!r}, "
+                f"levels={self.leaf.levels}, "
+                f"fused_untangle={self.fused_untangle})")
+
+    # ------------------------------------------------------------------
+    # resolved-strategy views
+
+    @property
+    def kind(self) -> str:
+        return self.spec.kind
+
+    @property
+    def n(self) -> int:
+        return self.spec.n
+
+    @property
+    def batch_shape(self) -> tuple:
+        return self.spec.batch_shape
+
+    @property
+    def placement(self) -> str:
+        return self.spec.placement
+
+    @property
+    def levels(self) -> int:
+        return self.leaf.levels
+
+    @property
+    def fused_untangle(self) -> bool:
+        """True when the r2c untangle epilogue fuses into one leaf kernel.
+
+        False in the known n > 2*MAX_LEAF regime where the half-length
+        transform is level-1 and the untangle runs as a host epilogue
+        (byte-neutral there, still flop-halved — DESIGN.md §4), and for
+        all c2c plans.
+        """
+        return self._fast_r2c and self.leaf.levels == 1
+
+    # ------------------------------------------------------------------
+    # analytic cost model (roofline numerators; DESIGN.md §3-4)
+
+    @property
+    def flops_per_row(self) -> float:
+        """Algorithmic complex-FLOPs per batch row (5 n log2 n convention)."""
+        n = self.spec.n
+        if n <= 1:
+            return 0.0
+        if self._fast_r2c:
+            m = n // 2
+            # half-length transform + O(m) untangle (~10 real ops per bin)
+            return 5.0 * m * math.log2(m) + 10.0 * m if m > 1 else 10.0 * m
+        return 5.0 * n * math.log2(n)
+
+    @property
+    def flops(self) -> float:
+        return self.spec.rows * self.flops_per_row
+
+    @property
+    def gemm_macs_per_row(self) -> float:
+        """Real MACs the matmul formulation issues per batch row."""
+        if self.spec.placement == "distributed":
+            d = self.dist
+            # pass 1: n2 length-n1 transforms; pass 2: n1 length-n2
+            return (d.n2 * kplan.make_plan(d.n1).gemm_macs
+                    + d.n1 * kplan.make_plan(d.n2).gemm_macs)
+        return self.leaf.gemm_macs
+
+    @property
+    def gemm_macs(self) -> float:
+        return self.spec.rows * self.gemm_macs_per_row
+
+    @property
+    def hbm_bytes_per_row(self) -> int:
+        """Planar-f32 payload HBM bytes per batch row (table traffic excl.)."""
+        s = self.spec
+        if s.placement == "distributed":
+            plane = _F32 * s.n
+            # two local passes, each read 2 planes + write 2 planes, plus
+            # the a2a buffers landing in HBM (one round-trip per a2a) and,
+            # unfused, the elementwise twiddle's extra round-trip
+            per_pass = 2 * 2 * plane
+            n_a2a = 3 if s.natural_order else 2
+            bytes_ = 2 * per_pass + n_a2a * per_pass
+            if not s.fuse_twiddle:
+                bytes_ += per_pass
+            return bytes_
+        if s.kind == "r2c" and self._fast_r2c:
+            return kplan.rfft_hbm_bytes(s.n)
+        if s.kind == "r2c":
+            # legacy full transform + sliced one-sided write
+            return (kplan.fft_hbm_bytes(s.n, s.layout)
+                    + 2 * _F32 * (s.n // 2 + 1))
+        return kplan.fft_hbm_bytes(s.n, s.layout)
+
+    @property
+    def hbm_bytes(self) -> int:
+        return self.spec.rows * self.hbm_bytes_per_row
+
+    @property
+    def collective_bytes(self) -> int:
+        """Total planar payload crossing ICI (distributed placement only)."""
+        if self.dist is None:
+            return 0
+        n_a2a = 3 if self.spec.natural_order else 2
+        return n_a2a * self.dist.d * self.dist.collective_bytes_per_device
+
+    # ------------------------------------------------------------------
+    # executables
+
+    @property
+    def trace_counts(self) -> dict:
+        return dict(self._traces)
+
+    @property
+    def trace_count(self) -> int:
+        return sum(self._traces.values())
+
+    @property
+    def executable(self):
+        """The id-stable jit'd forward callable (compiled once per shape)."""
+        return self._forward()[1]
+
+    def _forward(self):
+        if self._fwd is None:
+            with self._build_lock:
+                if self._fwd is None:
+                    self._fwd = self._build_forward()
+        return self._fwd
+
+    def _build_forward(self):
+        s = self.spec
+        in_shardings = out_shardings = None
+        if s.placement == "local":
+            if s.kind == "c2c":
+                def inner(xr, xi):
+                    return executors.fft(
+                        xr, xi, impl=s.impl, interpret=s.interpret,
+                        batch_tile=s.batch_tile, layout=s.layout)
+            else:
+                def inner(x):
+                    return executors.rfft(
+                        x, impl=s.impl, interpret=s.interpret,
+                        batch_tile=s.batch_tile, layout=s.layout)
+        elif s.placement == "segmented":
+            from repro.core.fft import segmented
+            inner, in_shardings, out_shardings = segmented.build_segmented(
+                self.mesh, s.axes, kind=s.kind, impl=s.impl,
+                interpret=s.interpret, layout=s.layout)
+        else:
+            from repro.core.fft import distributed
+            inner = distributed.build_distributed(
+                s.n, self.mesh, s.axes, impl=s.impl,
+                natural_order=s.natural_order, fuse_twiddle=s.fuse_twiddle,
+                interpret=s.interpret, layout=s.layout)
+
+        def counted(*args):
+            # python side effect: runs once per trace OF THIS PLAN'S JIT,
+            # so this counts retraces — the "zero retrace" observable. The
+            # tracer path below inlines `inner` instead, so outer-jit
+            # traces by callers never pollute the count.
+            self._traces["forward"] += 1
+            return inner(*args)
+
+        if in_shardings is not None:
+            jitted = jax.jit(counted, in_shardings=in_shardings,
+                             out_shardings=out_shardings)
+        else:
+            jitted = jax.jit(counted)
+        return inner, jitted
+
+    def _inverse(self):
+        if self._inv is None:
+            with self._build_lock:
+                if self._inv is None:
+                    self._inv = self._build_inverse()
+        return self._inv
+
+    def _build_inverse(self):
+        s = self.spec
+        fwd_inner = self._forward()[0]
+        if s.kind == "c2c":
+            if s.placement == "distributed" and not s.natural_order:
+                raise NotImplementedError(
+                    "execute_inverse needs natural_order=True: the "
+                    "transposed-out forward returns o1-major block order, "
+                    "so the conjugation identity would invert a permuted "
+                    "spectrum. Plan the inverse leg with "
+                    "natural_order=True (TRANSPOSED_OUT consumers apply "
+                    "their pointwise op, then run a separate inverse plan)")
+            n = s.n
+
+            def inner(yr, yi):
+                # conjugation identity; the forward must return natural
+                # order for this to be the true inverse (checked above)
+                ar, ai = fwd_inner(yr, -yi)
+                return ar / n, -ai / n
+        else:
+            if s.placement != "local":
+                raise NotImplementedError(
+                    f"execute_inverse for r2c plans is local-only, "
+                    f"got placement={s.placement!r}")
+
+            def inner(yr, yi):
+                return executors.irfft(
+                    yr, yi, impl=s.impl, interpret=s.interpret,
+                    batch_tile=s.batch_tile, layout=s.layout)
+
+        def counted(yr, yi):
+            self._traces["inverse"] += 1
+            return inner(yr, yi)
+
+        return inner, jax.jit(counted)
+
+    # ------------------------------------------------------------------
+
+    def _check_shape(self, got, expected, what):
+        if tuple(got) != expected:
+            raise ValueError(
+                f"{what}: plan was built for shape {expected} "
+                f"(batch_shape={self.spec.batch_shape}, n={self.spec.n}), "
+                f"got {tuple(got)}")
+
+    def execute(self, xr, xi):
+        """Forward c2c transform of planar (*batch_shape, n) float32 arrays."""
+        if self.spec.kind != "c2c":
+            raise ValueError(
+                "execute() is for kind='c2c' plans; use execute_real(x) "
+                "on this r2c plan")
+        shape = (*self.spec.batch_shape, self.spec.n)
+        self._check_shape(xr.shape, shape, "execute")
+        self._check_shape(xi.shape, shape, "execute")
+        raw, jitted = self._forward()
+        if _is_tracer(xr, xi):
+            return raw(xr, xi)
+        return jitted(xr, xi)
+
+    def execute_real(self, x):
+        """Forward r2c transform: real (*batch_shape, n) -> planar one-sided
+        (*batch_shape, n//2 + 1) spectrum."""
+        if self.spec.kind != "r2c":
+            raise ValueError(
+                "execute_real() is for kind='r2c' plans; use "
+                "execute(xr, xi) on this c2c plan")
+        self._check_shape(x.shape, (*self.spec.batch_shape, self.spec.n),
+                          "execute_real")
+        raw, jitted = self._forward()
+        if _is_tracer(x):
+            return raw(x)
+        return jitted(x)
+
+    def execute_inverse(self, yr, yi):
+        """Inverse transform.
+
+        c2c: planar spectrum -> planar signal (both (*batch_shape, n)).
+        r2c: one-sided (*batch_shape, n//2 + 1) spectrum -> real signal.
+        """
+        if self.spec.kind == "c2c":
+            shape = (*self.spec.batch_shape, self.spec.n)
+        else:
+            shape = (*self.spec.batch_shape, self.spec.n // 2 + 1)
+        self._check_shape(yr.shape, shape, "execute_inverse")
+        self._check_shape(yi.shape, shape, "execute_inverse")
+        raw, jitted = self._inverse()
+        if _is_tracer(yr, yi):
+            return raw(yr, yi)
+        return jitted(yr, yi)
+
+
+# ---------------------------------------------------------------------------
+# the facade
+
+
+def plan(kind: str = "c2c", *, n: int, batch_shape=(), mesh=None,
+         placement: str = "auto", layout: str = "zero_copy",
+         impl: str = "matfft", precision: str = "f32",
+         interpret: bool | None = None, batch_tile: int | None = None,
+         axes=None, natural_order: bool = True,
+         fuse_twiddle: bool = False) -> ExecutablePlan:
+    """Resolve a transform spec and return the cached `ExecutablePlan`.
+
+    Args:
+      kind: "c2c" (planar complex) or "r2c" (real input, one-sided output).
+      n: transform length (power of two; the real length for r2c).
+      batch_shape: leading batch dims of the operands; () for a single
+        signal (required for placement="distributed").
+      mesh: jax Mesh for segmented/distributed placements.
+      placement: "auto" (heuristic over n/batch/mesh), "local",
+        "segmented" (map-only batch sharding, zero collectives), or
+        "distributed" (cross-device four-step over all_to_all).
+      layout: "zero_copy" (default) or "copy" (measured legacy baseline).
+      impl: leaf kernel ("matfft" MXU GEMM, "stockham" VPU, "ref" jnp).
+      precision: "f32" (reserved for future variants).
+      interpret: Pallas interpret-mode override; None = auto off-TPU.
+      batch_tile: kernel batch/column tile override.
+      axes: mesh axes to use; None = every axis of the mesh.
+      natural_order / fuse_twiddle: distributed-placement options
+        (DESIGN.md §2; ignored elsewhere).
+
+    Same resolved spec (and mesh) -> the SAME plan object, with its jit'd
+    executables and twiddle tables already built.
+    """
+    # resolve interpret-mode auto-detection BEFORE the spec is built, so
+    # interpret=None and the equivalent explicit bool key the same plan
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+
+    num_devices = None
+    if mesh is not None:
+        if axes is None:
+            axes = tuple(mesh.shape.keys())
+        else:
+            if isinstance(axes, str):
+                axes = (axes,)
+            axes = tuple(a for a in axes if a in mesh.shape)
+        if not axes:
+            raise ValueError(
+                f"none of the requested axes exist in mesh axes "
+                f"{tuple(mesh.shape.keys())}")
+        num_devices = math.prod(mesh.shape[a] for a in axes)
+    elif axes is not None:
+        raise ValueError("axes= requires mesh=")
+
+    resolved = spec_mod.resolve(
+        kind=kind, n=n, batch_shape=batch_shape, placement=placement,
+        layout=layout, impl=impl, precision=precision, interpret=interpret,
+        batch_tile=batch_tile, num_devices=num_devices, axes=axes,
+        natural_order=natural_order, fuse_twiddle=fuse_twiddle)
+
+    # local plans don't touch the mesh -> key them mesh-free so the same
+    # spec planned with and without a mesh unifies
+    mesh_for_key = None if resolved.placement == "local" else mesh
+    key = (resolved, mesh_for_key)
+    with _CACHE_LOCK:
+        cached = _PLAN_CACHE.get(key)
+        if cached is not None:
+            _CACHE_INFO["hits"] += 1
+            return cached
+        _CACHE_INFO["misses"] += 1
+        p = ExecutablePlan(resolved, mesh_for_key)
+        _PLAN_CACHE[key] = p
+        return p
+
+
+def cache_info() -> dict:
+    """Process-level plan-cache stats: {hits, misses, size}."""
+    with _CACHE_LOCK:
+        return {**_CACHE_INFO, "size": len(_PLAN_CACHE)}
+
+
+def clear_plan_cache() -> None:
+    """Drop every cached plan (tests/benchmarks; compiled fns are freed)."""
+    with _CACHE_LOCK:
+        _PLAN_CACHE.clear()
+        _CACHE_INFO["hits"] = 0
+        _CACHE_INFO["misses"] = 0

@@ -1,0 +1,83 @@
+"""Smoke target for the plan-and-execute facade.
+
+    PYTHONPATH=src python -m repro.fft.selftest
+
+Plans + executes c2c and r2c at every placement the container can host —
+leaf (level 0), four-step (level 1), and segmented over an 8-device CPU
+mesh — in interpret mode, checks each against the numpy oracle, and
+verifies the plan cache never retraces. Exit code 0 = all pass. Wired into
+test.sh and the CI workflow as the facade's cheap end-to-end gate.
+"""
+
+import os
+import sys
+
+_flags = os.environ.get("XLA_FLAGS", "")
+if "xla_force_host_platform_device_count" not in _flags:
+    os.environ["XLA_FLAGS"] = (
+        _flags + " --xla_force_host_platform_device_count=8").strip()
+
+import numpy as np  # noqa: E402
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+import repro.fft as fft_api  # noqa: E402
+from repro import compat  # noqa: E402
+
+TOL = 5e-6
+
+
+def _rel_err(got_r, got_i, want):
+    got = np.asarray(got_r) + 1j * np.asarray(got_i)
+    scale = np.abs(want).max() or 1.0
+    return float(np.abs(got - want).max() / scale)
+
+
+def _check(name: str, err: float, plan) -> bool:
+    retrace_ok = plan.trace_counts["forward"] == 1
+    ok = err < TOL and retrace_ok
+    print(f"selftest {name:<24} {'OK' if ok else 'FAIL'} "
+          f"(err={err:.2e}, traces={plan.trace_counts['forward']})")
+    return ok
+
+
+def main() -> int:
+    rng = np.random.default_rng(0)
+    mesh = compat.make_mesh((jax.device_count(),), ("data",))
+    ok = True
+
+    cases = [
+        # (label, n, batch, mesh, placement)
+        ("leaf", 1024, (4,), None, "local"),
+        ("four_step", 1 << 15, (2,), None, "local"),
+        ("segmented", 512, (16,), mesh, "segmented"),
+    ]
+    for label, n, batch, m, placement in cases:
+        xr = rng.standard_normal((*batch, n)).astype(np.float32)
+        xi = rng.standard_normal((*batch, n)).astype(np.float32)
+
+        p = fft_api.plan(kind="c2c", n=n, batch_shape=batch, mesh=m,
+                         placement=placement, interpret=True)
+        yr, yi = p.execute(jnp.asarray(xr), jnp.asarray(xi))
+        p.execute(jnp.asarray(xr), jnp.asarray(xi))  # must not retrace
+        ok &= _check(f"c2c/{label}", _rel_err(yr, yi, np.fft.fft(xr + 1j * xi)),
+                     p)
+
+        # r2c at the same placement; four_step = the level-1 half-length
+        # regime (n such that n//2 > MAX_LEAF exercises the host untangle)
+        rn = 2 * n if label == "four_step" else n
+        x = rng.standard_normal((*batch, rn)).astype(np.float32)
+        pr = fft_api.plan(kind="r2c", n=rn, batch_shape=batch, mesh=m,
+                          placement=placement, interpret=True)
+        sr, si = pr.execute_real(jnp.asarray(x))
+        pr.execute_real(jnp.asarray(x))
+        ok &= _check(f"r2c/{label}", _rel_err(sr, si, np.fft.rfft(x)), pr)
+
+    info = fft_api.cache_info()
+    print(f"selftest plan cache: {info['misses']} built, "
+          f"{info['hits']} hits")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,196 @@
+"""Spec resolution for the plan-and-execute facade (`repro.fft.plan`).
+
+The pipeline is: user kwargs -> `resolve()` -> a frozen, hashable
+`FftSpec`. Resolution does ALL the up-front validation the paper's
+`cufftPlanMany` analogue needs — kind/layout/impl membership, power-of-two
+lengths, the placement heuristic, and the distributed `D | n1` constraint —
+so strategy errors surface as one clear `ValueError` at plan time instead
+of a deep shard_map/pallas failure at execute time.
+
+Placement resolution (`placement="auto"`):
+
+  no mesh                      -> "local"   (error if n > MAX_LEAF**2)
+  mesh + 1-D batch of >1 rows  -> "segmented"   (the paper's map-only regime)
+  mesh + single signal, D > 1,
+      n >= D^2                 -> "distributed" (cross-device four-step)
+  mesh + anything that still
+      fits one device          -> "local"
+  otherwise                    -> ValueError
+
+The spec is the plan-cache key (together with the mesh), so every field is
+normalized here: fields that don't apply to the resolved placement are
+forced to their defaults, and mesh axes are filtered to the axes the mesh
+actually has.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, replace
+
+from repro.kernels.fft import plan as kplan
+
+KINDS = ("c2c", "r2c")
+PLACEMENTS = ("auto", "local", "segmented", "distributed")
+LAYOUTS = ("zero_copy", "copy")
+IMPLS = ("matfft", "stockham", "ref")
+PRECISIONS = ("f32",)  # reserved: bf16/f64 variants are future work
+
+# largest single-device transform: two nested four-step levels of MAX_LEAF
+MAX_LOCAL_N = kplan.MAX_LEAF ** 2
+
+
+@dataclass(frozen=True)
+class FftSpec:
+    """Fully-resolved transform spec; hashable plan-cache key (sans mesh)."""
+
+    kind: str                     # "c2c" | "r2c"
+    n: int                        # transform length (real length for r2c)
+    batch_shape: tuple            # leading batch dims; () for distributed
+    placement: str                # resolved: "local"|"segmented"|"distributed"
+    layout: str                   # "zero_copy" | "copy"
+    impl: str                     # "matfft" | "stockham" | "ref"
+    precision: str                # "f32"
+    interpret: bool | None        # planner resolves None -> bool pre-cache
+    batch_tile: int | None        # kernel batch/col tile override
+    axes: tuple | None            # mesh axes (segmented batch / distributed)
+    natural_order: bool           # distributed only: all_to_all #3 or not
+    fuse_twiddle: bool            # distributed only: twiddle in leaf epilogue
+
+    @property
+    def rows(self) -> int:
+        return math.prod(self.batch_shape)
+
+
+def resolve_placement(n: int, rows: int, batch_ndim: int,
+                      num_devices: int | None) -> str:
+    """The `placement="auto"` heuristic (pure; unit-tested directly).
+
+    Args:
+      n: transform length.
+      rows: total batch rows (prod of batch_shape).
+      batch_ndim: len(batch_shape).
+      num_devices: mesh size over the candidate axes, or None if no mesh.
+    """
+    if num_devices is None:
+        if n > MAX_LOCAL_N:
+            raise ValueError(
+                f"n={n} exceeds the single-device maximum MAX_LEAF**2="
+                f"{MAX_LOCAL_N}; pass mesh= so the planner can pick "
+                f"placement='distributed'")
+        return "local"
+    if (rows > 1 and batch_ndim == 1 and n <= MAX_LOCAL_N
+            and rows % num_devices == 0):
+        # an indivisible batch cannot shard evenly; falls through to local
+        return "segmented"
+    if (rows == 1 and batch_ndim == 0 and num_devices > 1
+            and n >= num_devices ** 2):
+        return "distributed"
+    if n <= MAX_LOCAL_N:
+        return "local"
+    raise ValueError(
+        f"cannot auto-place n={n}: larger than the single-device maximum "
+        f"({MAX_LOCAL_N}) but not distributable — the cross-device "
+        f"four-step needs a scalar batch_shape and n >= D^2="
+        f"{num_devices ** 2} (D={num_devices} devices)")
+
+
+def _validate_distributed(n: int, num_devices: int, axes) -> None:
+    """The transpose-based distributed FFT constraint, surfaced early.
+
+    The four-step split n = n1 * n2 must satisfy D | n1 and D | n2 so each
+    all_to_all exchanges equal shards — i.e. n >= D^2 for pow2 D.
+    """
+    p = kplan.log2i(n)
+    if not kplan.is_pow2(num_devices):
+        raise ValueError(
+            f"distributed placement needs a power-of-two device count "
+            f"along {axes}, got D={num_devices}")
+    pd = kplan.log2i(num_devices)
+    if p < 2 * pd:
+        raise ValueError(
+            f"distributed four-step requires D | n1 and D | n2 for the "
+            f"split n = n1*n2, i.e. n >= D^2: got n=2^{p}, D=2^{pd} over "
+            f"axes {axes}; use placement='segmented' for batches of "
+            f"block-sized transforms")
+
+
+def resolve(kind: str, n: int, batch_shape, placement: str, layout: str,
+            impl: str, precision: str, interpret: bool | None,
+            batch_tile: int | None, num_devices: int | None, axes,
+            natural_order: bool, fuse_twiddle: bool) -> FftSpec:
+    """Validate + normalize everything into a frozen FftSpec."""
+    if kind not in KINDS:
+        raise ValueError(f"unknown kind {kind!r}; expected one of {KINDS}")
+    if placement not in PLACEMENTS:
+        raise ValueError(
+            f"unknown placement {placement!r}; expected one of {PLACEMENTS}")
+    if layout not in LAYOUTS:
+        raise ValueError(f"unknown layout {layout!r}; expected one of {LAYOUTS}")
+    if impl not in IMPLS:
+        raise ValueError(f"unknown fft impl {impl!r}; expected one of {IMPLS}")
+    if precision not in PRECISIONS:
+        raise ValueError(
+            f"unsupported precision {precision!r}; supported: {PRECISIONS}")
+    n = int(n)
+    kplan.log2i(n)  # raises for non-pow2 / non-positive
+    if kind == "r2c" and n < 2:
+        raise ValueError(f"r2c needs n >= 2, got n={n}")
+    batch_shape = tuple(int(d) for d in batch_shape)
+    if any(d < 1 for d in batch_shape):
+        raise ValueError(f"batch_shape dims must be >= 1, got {batch_shape}")
+    if batch_tile is not None and batch_tile < 1:
+        raise ValueError(f"batch_tile must be >= 1, got {batch_tile}")
+
+    rows = math.prod(batch_shape)
+    if placement == "auto":
+        placement = resolve_placement(n, rows, len(batch_shape), num_devices)
+
+    if placement == "local":
+        if n > MAX_LOCAL_N:
+            raise ValueError(
+                f"placement='local' caps n at MAX_LEAF**2={MAX_LOCAL_N}, "
+                f"got n={n}; use placement='distributed' with a mesh")
+        axes = None
+    elif placement == "segmented":
+        if num_devices is None:
+            raise ValueError("placement='segmented' requires mesh=")
+        if len(batch_shape) != 1:
+            raise ValueError(
+                f"placement='segmented' shards a 1-D batch of segments; "
+                f"reshape to (batch, n), got batch_shape={batch_shape}")
+        if n > MAX_LOCAL_N:
+            raise ValueError(
+                f"segmented segments run device-locally, so n caps at "
+                f"MAX_LEAF**2={MAX_LOCAL_N}, got n={n}")
+        if rows % num_devices:
+            raise ValueError(
+                f"segmented batch of {rows} rows does not shard evenly "
+                f"over {num_devices} devices (axes {axes}); pad the batch "
+                f"or use placement='local'")
+    else:  # distributed
+        if num_devices is None:
+            raise ValueError("placement='distributed' requires mesh=")
+        if kind != "c2c":
+            raise ValueError(
+                "kind='r2c' is not supported for placement='distributed'; "
+                "run a c2c transform of the packed signal or use "
+                "placement='segmented' for batches of real segments")
+        if batch_shape != ():
+            raise ValueError(
+                f"placement='distributed' transforms ONE global signal of "
+                f"shape (n,); got batch_shape={batch_shape} — use "
+                f"placement='segmented' for batches")
+        _validate_distributed(n, num_devices, axes)
+
+    spec = FftSpec(kind=kind, n=n, batch_shape=batch_shape,
+                   placement=placement, layout=layout, impl=impl,
+                   precision=precision, interpret=interpret,
+                   batch_tile=batch_tile,
+                   axes=tuple(axes) if axes is not None else None,
+                   natural_order=bool(natural_order),
+                   fuse_twiddle=bool(fuse_twiddle))
+    # normalize placement-irrelevant knobs so equivalent specs cache-hit
+    if placement != "distributed":
+        spec = replace(spec, natural_order=True, fuse_twiddle=False)
+    return spec

@@ -26,17 +26,16 @@ import json
 import jax
 import jax.numpy as jnp
 
-from repro.core.fft import distributed
-from repro.core.fft.segmented import segmented_fft
-from repro.kernels.fft import ops as fft_ops
+import repro.fft as fft_api
 from repro.launch.hlo_analysis import collective_stats, cost_analysis_dict
 from repro.launch.mesh import make_production_mesh
 
 PEAK, HBM, ICI = 197e12, 819e9, 50e9
 
 
-def measure(fn, args_abs, name):
-    lowered = jax.jit(fn).lower(*args_abs)
+def measure(plan, args_abs, name):
+    """Lower+compile one ExecutablePlan's jit'd callable; exact XLA costs."""
+    lowered = plan.executable.lower(*args_abs)
     compiled = lowered.compile()
     cost = cost_analysis_dict(compiled.cost_analysis())
     mem = compiled.memory_analysis()
@@ -53,6 +52,11 @@ def measure(fn, args_abs, name):
         "compute_s": flops / PEAK,
         "memory_s": byts / HBM,
         "collective_s": colls["total_bytes"] / ICI,
+        # the plan's analytic model next to XLA's measured costs, so the
+        # two stay honest against each other in the trajectory
+        "plan_flops": plan.flops,
+        "plan_hbm_bytes": plan.hbm_bytes,
+        "plan_collective_bytes": plan.collective_bytes,
     }
     rec["bound"] = max(("compute_s", "memory_s", "collective_s"),
                        key=lambda k: rec[k])
@@ -77,9 +81,10 @@ def main(argv=None):
 
     # paper regime: segmented map-only
     seg = sds((args.seg_batch, args.seg_len), jnp.float32)
-    recs.append(measure(
-        lambda a, b: segmented_fft(a, b, mesh, batch_axes=axes),
-        (seg, seg), "segmented"))
+    p_seg = fft_api.plan(kind="c2c", n=args.seg_len,
+                         batch_shape=(args.seg_batch,), mesh=mesh,
+                         placement="segmented", axes=axes)
+    recs.append(measure(p_seg, (seg, seg), "segmented"))
 
     # distributed four-step variants
     sig = sds((args.n,), jnp.float32)
@@ -88,10 +93,9 @@ def main(argv=None):
         ("dist_fused", dict(natural_order=True, fuse_twiddle=True)),
         ("dist_transposed", dict(natural_order=False, fuse_twiddle=True)),
     ):
-        recs.append(measure(
-            lambda a, b, kw=kw: distributed.distributed_fft(
-                a, b, mesh, axes, **kw),
-            (sig, sig), name))
+        p = fft_api.plan(kind="c2c", n=args.n, mesh=mesh,
+                         placement="distributed", axes=axes, **kw)
+        recs.append(measure(p, (sig, sig), name))
 
     for r in recs:
         print(json.dumps(r))

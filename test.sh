@@ -12,4 +12,12 @@ export XLA_FLAGS="${XLA_FLAGS:---xla_force_host_platform_device_count=8}"
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 
+# facade smoke: plan+execute c2c and r2c at leaf, four-step, and segmented
+# placements in interpret mode (fails loudly before the full suite).
+# Skipped for targeted runs (args given) and when CI already ran it as a
+# dedicated step (REPRO_SKIP_SELFTEST=1).
+if [[ $# -eq 0 && -z "${REPRO_SKIP_SELFTEST:-}" ]]; then
+  python -m repro.fft.selftest
+fi
+
 exec python -m pytest -x -q "$@"

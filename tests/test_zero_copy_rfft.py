@@ -187,6 +187,34 @@ def test_rfft_single_pallas_call():
 # byte counters (the benchmark/acceptance arithmetic)
 
 
+def test_fused_untangle_flag_matches_byte_counters():
+    """The PR-1 limit regime is now explicit: `plan.fused_untangle` says
+    whether the rfft untangle fused into one leaf kernel, and the byte
+    counters must agree with the flag in both regimes (DESIGN.md §4)."""
+    import repro.fft as fft_api
+
+    for n in [8, 4096, 8192, 32768]:  # n//2 <= MAX_LEAF: fused epilogue
+        p = fft_api.plan(kind="r2c", n=n, batch_shape=(1,))
+        assert p.fused_untangle, n
+        # one kernel: read the real plane, write the one-sided spectrum
+        assert plan.rfft_hbm_bytes(n) == 4 * n + 2 * 4 * (n // 2 + 1)
+        assert p.hbm_bytes_per_row == plan.rfft_hbm_bytes(n)
+
+    for n in [1 << 16, 1 << 17]:  # n > 2*MAX_LEAF: host pack + untangle
+        p = fft_api.plan(kind="r2c", n=n, batch_shape=(1,))
+        assert not p.fused_untangle, n
+        m = n // 2
+        pack = 4 * n + 2 * 4 * m
+        untangle = 2 * 2 * 4 * m + 2 * 4 * (m + 1)
+        assert plan.rfft_hbm_bytes(n) == \
+            pack + plan.fft_hbm_bytes(m, "zero_copy") + untangle
+        assert p.hbm_bytes_per_row == plan.rfft_hbm_bytes(n)
+
+    # c2c plans never untangle
+    assert not fft_api.plan(kind="c2c", n=4096,
+                            batch_shape=(1,)).fused_untangle
+
+
 def test_hbm_byte_counters():
     for n in [32768, 1 << 16, 1 << 20]:
         assert plan.fft_hbm_bytes(n, "zero_copy") < plan.fft_hbm_bytes(n, "copy")
