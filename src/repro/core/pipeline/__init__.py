@@ -1,6 +1,11 @@
 from repro.core.pipeline.blockstore import BlockStore
-from repro.core.pipeline.maponly import MapOnlyJob, JobConfig
+from repro.core.pipeline.maponly import MapOnlyJob, JobConfig, JobStats
 from repro.core.pipeline.records import segments_of_block, block_of_segments
+from repro.core.pipeline.stream import (MapFnTransform, SegmentFFTTransform,
+                                        StagingPool, StreamExecutor,
+                                        StreamTransform)
 
-__all__ = ["BlockStore", "MapOnlyJob", "JobConfig", "segments_of_block",
-           "block_of_segments"]
+__all__ = ["BlockStore", "MapOnlyJob", "JobConfig", "JobStats",
+           "segments_of_block", "block_of_segments", "StreamExecutor",
+           "StreamTransform", "SegmentFFTTransform", "MapFnTransform",
+           "StagingPool"]

@@ -46,6 +46,11 @@ class JobConfig:
     speculation: bool = True
     min_completed_for_speculation: int = 3
     poll_interval_s: float = 0.02
+    # --- streaming path knobs (MapOnlyJob(pipelined=True) / stream.py) ---
+    readers: int = 2      # prefetch/decode threads
+    writers: int = 2      # writeback (D2H + encode + write) threads
+    coalesce: int = 1     # same-shaped blocks fused into one device batch
+    inflight: int = 2     # launched-but-unrealized batch window
 
 
 @dataclass
@@ -60,36 +65,86 @@ class TaskState:
 
 
 class Manifest:
-    """Crash-consistent per-block task journal (atomic JSON rewrites)."""
+    """Crash-consistent per-block task journal (append-only, O(1)/transition).
+
+    Layout: line-delimited JSON — one ``snapshot`` record (the full task
+    table) followed by one ``update`` line per state transition. A
+    transition appends + fsyncs ~100 bytes instead of rewriting the whole
+    table (the seed behaviour was O(blocks) bytes per transition, so
+    O(blocks²) per job — measurable manifest stalls past a few thousand
+    blocks). Crash-restart semantics are unchanged: on open the journal is
+    replayed in order (a torn final line from a crash mid-append is
+    dropped; every earlier line was fsync-durable), RUNNING tasks demote to
+    PENDING, and the journal is compacted back to a single fresh snapshot.
+    Legacy single-object manifests (the pre-journal format) replay too.
+    """
 
     def __init__(self, path: Path, num_blocks: int):
         self.path = Path(path)
         self._lock = threading.Lock()
+        self._fh = None
+        self.appends = 0  # transitions journaled by THIS process (stats)
         if self.path.exists():
-            doc = json.loads(self.path.read_text())
-            self.tasks = {int(k): TaskState(**v) for k, v in doc.items()}
+            self.tasks = self._replay(self.path)
             for t in self.tasks.values():  # RUNNING at crash time -> retry
                 if t.status == RUNNING:
                     t.status = PENDING
         else:
             self.tasks = {i: TaskState(i) for i in range(num_blocks)}
-            self._flush()
+        self._compact()
 
-    def _flush(self) -> None:
-        doc = {k: vars(v) for k, v in self.tasks.items()}
+    @staticmethod
+    def _replay(path: Path) -> dict[int, TaskState]:
+        tasks: dict[int, TaskState] = {}
+        for line in path.read_text().splitlines():
+            if not line.strip():
+                continue
+            try:
+                rec = json.loads(line)
+            except json.JSONDecodeError:
+                break  # torn tail from a crash mid-append; rest is durable
+            if rec.get("type") == "update":
+                t = tasks[rec["index"]]
+                for k, v in rec["fields"].items():
+                    setattr(t, k, v)
+            elif rec.get("type") == "snapshot":
+                tasks = {t["index"]: TaskState(**t) for t in rec["tasks"]}
+            else:  # legacy format: one JSON object {index: task_fields}
+                tasks = {int(k): TaskState(**v) for k, v in rec.items()}
+        return tasks
+
+    def _compact(self) -> None:
+        """Rewrite as snapshot-only (atomic), then reopen for appending."""
+        if self._fh is not None:
+            self._fh.close()
+        snap = json.dumps({"type": "snapshot",
+                           "tasks": [vars(t) for t in self.tasks.values()]})
         fd, tmp = tempfile.mkstemp(dir=self.path.parent, prefix=".mtmp_")
         with os.fdopen(fd, "w") as f:
-            json.dump(doc, f)
+            f.write(snap + "\n")
             f.flush()
             os.fsync(f.fileno())
         os.replace(tmp, self.path)
+        self._fh = open(self.path, "a")
+
+    def close(self) -> None:
+        with self._lock:
+            if self._fh is not None:
+                self._fh.close()
+                self._fh = None
 
     def update(self, index: int, **fields) -> None:
         with self._lock:
             t = self.tasks[index]
             for k, v in fields.items():
                 setattr(t, k, v)
-            self._flush()
+            if self._fh is None:  # reopened after close(): keep appending
+                self._fh = open(self.path, "a")
+            self._fh.write(json.dumps(
+                {"type": "update", "index": index, "fields": fields}) + "\n")
+            self._fh.flush()
+            os.fsync(self._fh.fileno())
+            self.appends += 1
 
     def pending(self) -> list[int]:
         return [i for i, t in self.tasks.items() if t.status == PENDING]
@@ -107,19 +162,32 @@ class JobStats:
     speculative_wins: int = 0
     wall_s: float = 0.0
     task_seconds: list[float] = field(default_factory=list)
+    # streaming path: per-stage clock totals (read/h2d/compute/d2h/write)
+    # and coalescing counters; empty/zero on the serial path
+    stage_s: dict[str, float] = field(default_factory=dict)
+    batches: int = 0
+    coalesced_blocks: int = 0
 
 
 class MapOnlyJob:
     """Runs ``map_fn(block_bytes, index) -> bytes`` over every store block."""
 
     def __init__(self, store: BlockStore, out_dir: os.PathLike,
-                 map_fn: Callable[[bytes, int], bytes],
+                 map_fn: Callable[[bytes, int], bytes] | None = None,
                  config: JobConfig | None = None,
-                 job_dir: os.PathLike | None = None):
+                 job_dir: os.PathLike | None = None,
+                 pipelined: bool = False, transform=None):
+        if map_fn is None and transform is None:
+            raise ValueError("need map_fn (serial / pipelined) or "
+                             "transform (pipelined)")
+        if transform is not None and not pipelined:
+            raise ValueError("transform= requires pipelined=True")
         self.store = store
         self.out_dir = Path(out_dir)
         self.out_dir.mkdir(parents=True, exist_ok=True)
         self.map_fn = map_fn
+        self.pipelined = pipelined
+        self.transform = transform
         self.cfg = config or JobConfig()
         job_dir = Path(job_dir) if job_dir else self.out_dir
         job_dir.mkdir(parents=True, exist_ok=True)
@@ -138,8 +206,22 @@ class MapOnlyJob:
         return index, time.monotonic() - t0
 
     def run(self) -> JobStats:
+        if self.pipelined:
+            # the overlapped stream executor (stream.py): same manifest /
+            # retry / speculation semantics, staged instead of lump-serial
+            from repro.core.pipeline.stream import (MapFnTransform,
+                                                    StreamExecutor)
+            transform = self.transform or MapFnTransform(self.map_fn)
+            return StreamExecutor(self.store, self.out_dir, transform,
+                                  self.cfg, self.manifest, self.stats).run()
         cfg = self.cfg
         t_start = time.monotonic()
+        try:
+            return self._run_serial(cfg, t_start)
+        finally:
+            self.manifest.close()  # fd hygiene; reopens on next update
+
+    def _run_serial(self, cfg: JobConfig, t_start: float) -> JobStats:
         todo = self.manifest.pending()
         inflight: dict[Future, tuple[int, float, bool]] = {}
         speculated: set[int] = set()

@@ -80,6 +80,8 @@ class ExecutablePlan:
         self.leaf = kplan.make_plan(max(local_n, 1))
         self._traces = {"forward": 0, "inverse": 0}
         self._fwd = None  # (inner, jitted), built lazily
+        self._fwd_donated = None  # donate-argnums variant (execute_async)
+        self._fwd_shardings = None  # (in, out) captured for donated builds
         self._inv = None
         object.__setattr__(self, "_frozen", True)
 
@@ -256,12 +258,43 @@ class ExecutablePlan:
             self._traces["forward"] += 1
             return inner(*args)
 
+        self._fwd_shardings = (in_shardings, out_shardings)
         if in_shardings is not None:
             jitted = jax.jit(counted, in_shardings=in_shardings,
                              out_shardings=out_shardings)
         else:
             jitted = jax.jit(counted)
         return inner, jitted
+
+    def _forward_donated(self):
+        """The forward jit with every operand buffer donated.
+
+        A distinct executable from `_forward()` (donation is a compile-time
+        property), so its first call costs one extra trace of this plan;
+        after that, repeat calls are zero-retrace like the plain path. On
+        backends without donation support (CPU) XLA ignores the donation
+        and the call stays correct.
+        """
+        if self._fwd_donated is None:
+            with self._build_lock:
+                if self._fwd_donated is None:
+                    inner = self._forward()[0]
+                    nargs = 1 if self.spec.kind == "r2c" else 2
+
+                    def counted(*args):
+                        self._traces["forward"] += 1
+                        return inner(*args)
+
+                    in_sh, out_sh = self._fwd_shardings
+                    donate = tuple(range(nargs))
+                    if in_sh is not None:
+                        self._fwd_donated = jax.jit(
+                            counted, in_shardings=in_sh, out_shardings=out_sh,
+                            donate_argnums=donate)
+                    else:
+                        self._fwd_donated = jax.jit(counted,
+                                                    donate_argnums=donate)
+        return self._fwd_donated
 
     def _inverse(self):
         if self._inv is None:
@@ -342,6 +375,40 @@ class ExecutablePlan:
         if _is_tracer(x):
             return raw(x)
         return jitted(x)
+
+    def execute_async(self, *operands, donate: bool = False):
+        """Launch the forward transform WITHOUT synchronizing.
+
+        Returns unrealized device arrays immediately (JAX async dispatch);
+        the caller decides where the sync point is — e.g. the stream
+        executor's in-flight window boundary (`core/pipeline/stream.py`)
+        realizes results in its writeback stage while later batches are
+        already dispatched. `execute`/`execute_real` have the same launch
+        semantics but are documented as the simple path; this entry exists
+        so pipelined callers state their intent and get `donate`.
+
+        Operands: `(xr, xi)` for c2c plans, `(x,)` for r2c.
+        donate=True compiles a variant that donates the operand buffers to
+        XLA, letting outputs alias the staging buffers' device memory (the
+        operands must not be reused after the call). Ignored (correctly,
+        with no aliasing) on backends without donation support.
+        """
+        nargs = 1 if self.spec.kind == "r2c" else 2
+        if len(operands) != nargs:
+            raise ValueError(
+                f"execute_async on a {self.spec.kind!r} plan takes "
+                f"{nargs} operand(s), got {len(operands)}")
+        shape = (*self.spec.batch_shape, self.spec.n)
+        for op in operands:
+            self._check_shape(op.shape, shape, "execute_async")
+        if _is_tracer(*operands):
+            return self._forward()[0](*operands)
+        if donate:
+            # backends without donation support ignore the hint (correct,
+            # no aliasing); any "donated buffers were not usable" warning
+            # is deduped per call site by the default warnings filter
+            return self._forward_donated()(*operands)
+        return self._forward()[1](*operands)
 
     def execute_inverse(self, yr, yi):
         """Inverse transform.

@@ -9,7 +9,7 @@ cd "$(dirname "$0")"
 # count in a subprocess before importing jax; this default covers direct
 # runs of core/fft modules and keeps CI deterministic.
 export XLA_FLAGS="${XLA_FLAGS:---xla_force_host_platform_device_count=8}"
-export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+export PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}"
 export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 
 # facade smoke: plan+execute c2c and r2c at leaf, four-step, and segmented
@@ -18,6 +18,13 @@ export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 # dedicated step (REPRO_SKIP_SELFTEST=1).
 if [[ $# -eq 0 && -z "${REPRO_SKIP_SELFTEST:-}" ]]; then
   python -m repro.fft.selftest
+fi
+
+# stream-pipeline overlap gate: pipelined throughput must stay strictly
+# above the serial map loop (BENCH_pipeline.json; exits nonzero on
+# regression). Same skip rules as the selftest.
+if [[ $# -eq 0 && -z "${REPRO_SKIP_PIPELINE_BENCH:-}" ]]; then
+  python benchmarks/bench_pipeline.py --quick
 fi
 
 exec python -m pytest -x -q "$@"

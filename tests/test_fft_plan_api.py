@@ -336,3 +336,54 @@ def test_cost_model_folds_byte_counters():
     pcopy = fft_api.plan(kind="c2c", n=32768, batch_shape=(4,),
                          layout="copy")
     assert pcopy.hbm_bytes_per_row == kplan.fft_hbm_bytes(32768, "copy")
+
+
+# ---------------------------------------------------------------------------
+# execute_async: the stream executor's launch entry (no sync, donate)
+
+
+def test_execute_async_matches_execute(rng):
+    p = fft_api.plan(kind="c2c", n=256, batch_shape=(4,))
+    xr = rng.standard_normal((4, 256)).astype(np.float32)
+    xi = rng.standard_normal((4, 256)).astype(np.float32)
+    want_r, want_i = p.execute(jnp.asarray(xr), jnp.asarray(xi))
+    got_r, got_i = p.execute_async(xr, xi)
+    np.testing.assert_array_equal(np.asarray(want_r), np.asarray(got_r))
+    np.testing.assert_array_equal(np.asarray(want_i), np.asarray(got_i))
+
+
+def test_execute_async_donate_zero_retrace_on_repeat(rng):
+    fft_api.clear_plan_cache()
+    p = fft_api.plan(kind="c2c", n=256, batch_shape=(3,))
+    want = np.asarray(p.execute_async(
+        rng.standard_normal((3, 256)).astype(np.float32),
+        rng.standard_normal((3, 256)).astype(np.float32), donate=True)[0])
+    assert p.trace_counts["forward"] == 1
+    for _ in range(3):  # repeats reuse the donated executable: no retrace
+        xr = rng.standard_normal((3, 256)).astype(np.float32)
+        xi = rng.standard_normal((3, 256)).astype(np.float32)
+        ref_r, _ = np.fft.fft(xr + 1j * xi).real, None
+        got = p.execute_async(xr, xi, donate=True)
+        np.testing.assert_allclose(np.asarray(got[0]), ref_r,
+                                   rtol=2e-4, atol=2e-3)
+    assert p.trace_counts["forward"] == 1
+    assert want is not None
+    # the plain executable is a second (also cached-once) trace
+    xr = rng.standard_normal((3, 256)).astype(np.float32)
+    p.execute(jnp.asarray(xr), jnp.asarray(xr))
+    assert p.trace_counts["forward"] == 2
+
+
+def test_execute_async_r2c_and_arity_errors(rng):
+    p = fft_api.plan(kind="r2c", n=256, batch_shape=(2,))
+    x = rng.standard_normal((2, 256)).astype(np.float32)
+    want = p.execute_real(jnp.asarray(x))
+    got = p.execute_async(x)
+    np.testing.assert_array_equal(np.asarray(want[0]), np.asarray(got[0]))
+    with pytest.raises(ValueError, match="1 operand"):
+        p.execute_async(x, x)
+    pc = fft_api.plan(kind="c2c", n=256, batch_shape=(2,))
+    with pytest.raises(ValueError, match="2 operand"):
+        pc.execute_async(x)
+    with pytest.raises(ValueError, match="execute_async"):
+        pc.execute_async(x[:, :128], x[:, :128])

@@ -1,5 +1,7 @@
 """BlockStore / record / map-only pipeline behaviour + property tests."""
 
+import json
+
 import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
@@ -77,3 +79,67 @@ def test_manifest_reopen(tmp_path):
     again = BlockStore.open(tmp_path / "s")
     assert [vars(b) for b in again.blocks] == [vars(b) for b in store.blocks]
     assert again.read_block(1) == store.read_block(1)
+
+
+def test_put_file_streams_and_matches_put_bytes(tmp_path, rng):
+    data = rng.bytes(100_000)  # deliberately not block-aligned
+    src = tmp_path / "input.bin"
+    src.write_bytes(data)
+    by_bytes = BlockStore(tmp_path / "a", block_bytes=1 << 14)
+    by_bytes.put_bytes(data)
+    by_file = BlockStore(tmp_path / "b", block_bytes=1 << 14)
+    by_file.put_file(src)
+    assert ([vars(b) for b in by_file.blocks]
+            == [vars(b) for b in by_bytes.blocks])
+    assert by_file.total_bytes == len(data)
+    out = b"".join(by_file.read_block(i) for i in range(len(by_file.blocks)))
+    assert out == data
+
+
+def test_put_bytes_accepts_memoryview_and_arrays(tmp_path, rng):
+    arr = rng.standard_normal(1000).astype(np.float32)
+    store = BlockStore(tmp_path / "s", block_bytes=512)
+    store.put_array(arr)
+    joined = b"".join(store.read_block(i) for i in range(len(store.blocks)))
+    assert joined == arr.tobytes()
+
+
+def test_blocks_carry_both_crc32_and_sha(tmp_path):
+    store = BlockStore(tmp_path / "s", block_bytes=16)
+    store.put_bytes(bytes(64))
+    for b in store.blocks:
+        assert len(b.crc32) == 8  # hot-path checksum
+        assert len(b.checksum) == 16  # replica-repair ground truth
+    # crc32 catches hot-path corruption exactly like the old sha did
+    store.corrupt_block(0)
+    with pytest.raises(IOError):
+        store.read_block(0)
+
+
+def test_legacy_manifest_without_crc_verifies_via_sha(tmp_path):
+    store = BlockStore(tmp_path / "s", block_bytes=16)
+    store.put_bytes(bytes(range(32)))
+    doc = json.loads((tmp_path / "s" / "manifest.json").read_text())
+    for b in doc["blocks"]:
+        del b["crc32"]  # manifest written by the pre-crc code
+    (tmp_path / "s" / "manifest.json").write_text(json.dumps(doc))
+    again = BlockStore.open(tmp_path / "s")
+    assert again.blocks[0].crc32 == ""
+    assert again.read_block(0) == store.read_block(0)  # sha fallback
+    again.corrupt_block(1)
+    with pytest.raises(IOError):
+        again.read_block(1)
+
+
+def test_getmerge_streams_large_blocks(tmp_path, rng, monkeypatch):
+    import repro.core.pipeline.blockstore as bs
+    monkeypatch.setattr(bs, "MERGE_CHUNK", 1 << 10)  # force many chunks
+    data = rng.bytes(1 << 16)
+    store = BlockStore(tmp_path / "s", block_bytes=1 << 14)
+    store.put_bytes(data)
+    out = tmp_path / "o"
+    for i in range(len(store.blocks)):
+        store.write_output_block(out, i, store.read_block(i))
+    n = store.getmerge(out, tmp_path / "m.bin")
+    assert n == len(data)
+    assert (tmp_path / "m.bin").read_bytes() == data
