@@ -1,26 +1,47 @@
-"""Cross-device (level 2) four-step FFT via shard_map + all_to_all.
+"""Cross-device (level 2) four-step FFT via shard_map + collectives.
 
 This implements the paper's §VI future work ("paralleling an FFT across a
 server cluster ... using RDMA") TPU-natively: the Hadoop cluster becomes a
 mesh axis (or a flattened tuple of axes, up to the full 512-chip multi-pod
-mesh), HDFS block exchange becomes `jax.lax.all_to_all` over ICI, and each
-"map task" runs the level-0/1 MXU kernels of repro/fft/executors.py on its
-local shard.
+mesh), HDFS block exchange becomes an on-device collective over ICI, and
+each "map task" runs the level-0/1 MXU kernels of repro/fft/executors.py
+on its local shard.
 
 Data layout (N = N1 * N2 global points, D devices, planar re/im):
 
   input   x[i], i = i1*N2 + i2, sharded contiguously: device d owns
           i in [d*N/D, (d+1)*N/D)  == rows i1 in [d*N1/D, ...) of (N1, N2)
-  a2a #1  split i2, concat i1   -> (N1, N2/D)   full columns on-device
+  xchg #1 split i2, concat i1   -> (N1, N2/D)   full columns on-device
   pass 1  local FFT over i1 (length N1, batched N2/D)  + on-the-fly twiddle
-  a2a #2  split o1, concat i2   -> (N2, N1/D)   full rows on-device
-  pass 2  local FFT over i2 (length N2, batched N1/D)
-  a2a #3  (natural_order only) split o2, concat o1 -> contiguous output shard
+  xchg #2 split o1, concat i2   -> (N2, N1/D)   full rows on-device
+  pass 2  local FFT over i2 (length N2, batched N1/D), stored o2-major
+  xchg #3 (natural_order only) split o2, concat o1 -> contiguous output
+          shard, already o2-major — no transpose epilogue
+
+Two exchange engines implement each cross-device transpose (DESIGN.md §8):
+
+  overlap=None ("off")   one monolithic `lax.all_to_all` per exchange —
+                         the measured baseline; every collective byte sits
+                         exposed on the critical path.
+  overlap=k (chunks)     the exchange is split into k column slabs, each
+                         rotated through the mesh as D-1 direct
+                         `lax.ppermute` rounds (double-buffered: slab c+1
+                         is in flight while slab c — already assembled —
+                         runs its local `fft_cols` + twiddle). By the last
+                         round only the final slab's FFT is non-hidden, so
+                         all but 1/k of the collective bytes can hide
+                         behind MXU compute (`exposed_collective_bytes`).
+
+Both engines are bitwise-identical transforms: the exchange is pure data
+movement, and the per-slab kernels compute each column with exactly the
+same GEMMs as the monolithic call (benchmarks/bench_distributed.py gates
+on this).
 
 Constraints: N, N1, N2 powers of two with D | N1 and D | N2 (hence N >= D^2)
 — the standard constraint of transpose-based distributed FFTs, validated up
 front by `repro.fft.spec` so it surfaces as a plan-time ValueError. With the
-512-chip mesh the minimum distributed transform is 2^18 points.
+512-chip mesh the minimum distributed transform is 2^18 points. Chunked
+overlap additionally needs chunks | N1/D and chunks | N2/D.
 
 Twiddle note: W_N^{i2*o1} exponents reach N1*N2 ~ 2^40+, far beyond f32
 integer precision. Since N is a power of two, `(i2 * o1) mod N` is computed
@@ -45,6 +66,14 @@ from repro import compat
 from repro.fft import executors as fft_ex
 from repro.kernels.fft import plan as fft_plan
 
+# overlap="auto" heuristic bounds (DESIGN.md §8): below AUTO_MIN_N the
+# per-round ppermute latency exceeds the compute the pipeline could hide
+# (slab GEMMs can't cover a round); above RING_MAX_D the direct ring's
+# D-1 rounds per slab degenerate into a latency ladder of tiny pieces.
+OVERLAP_AUTO_MIN_N = 1 << 26
+OVERLAP_RING_MAX_D = 64
+OVERLAP_AUTO_CHUNKS = 4
+
 
 @dataclass(frozen=True)
 class DistPlan:
@@ -52,14 +81,39 @@ class DistPlan:
     d: int           # number of devices along the FFT axes
     n1: int          # pass-1 transform length (columns)
     n2: int          # pass-2 transform length (rows)
+    natural_order: bool = True  # False skips exchange #3 (TRANSPOSED_OUT)
+    chunks: int | None = None   # ppermute pipeline slabs; None = all_to_all
+
+    @property
+    def n_exchanges(self) -> int:
+        """Cross-device transposes executed: transposed-out skips #3."""
+        return 3 if self.natural_order else 2
+
+    @property
+    def bytes_per_exchange_per_device(self) -> int:
+        """Planar f32 payload each device moves in ONE exchange."""
+        return 2 * 4 * self.n // self.d
 
     @property
     def collective_bytes_per_device(self) -> int:
-        """Planar f32 payload each device exchanges per all_to_all."""
-        return 2 * 4 * self.n // self.d
+        """Planar f32 payload each device exchanges across the whole
+        transform — n_exchanges legs, so transposed-out plans report one
+        exchange fewer (previously this over-reported by one a2a)."""
+        return self.n_exchanges * self.bytes_per_exchange_per_device
+
+    @property
+    def exposed_collective_bytes_per_device(self) -> int:
+        """Bytes per device that CANNOT overlap compute: the pipeline's
+        fill/drain slab per exchange. chunks=None (or 1) exposes every
+        byte; k slabs expose 1/k of each leg. Full hiding of the rest
+        additionally needs per-round compute >= per-round transfer time —
+        the bench's event model accounts for that; this is the structural
+        lower bound."""
+        return self.collective_bytes_per_device // (self.chunks or 1)
 
 
-def plan_distributed(n: int, num_devices: int) -> DistPlan:
+def plan_distributed(n: int, num_devices: int, *, natural_order: bool = True,
+                     chunks: int | None = None) -> DistPlan:
     p = fft_plan.log2i(n)
     pd = fft_plan.log2i(num_devices)
     if p < 2 * pd:
@@ -67,7 +121,39 @@ def plan_distributed(n: int, num_devices: int) -> DistPlan:
             f"distributed FFT needs n >= D^2 (n=2^{p}, D=2^{pd}); "
             f"use segmented_fft for batches of smaller transforms")
     a = min(max(p // 2, pd), p - pd)  # log2(n1), clamped so D | n1 and D | n2
-    return DistPlan(n=n, d=num_devices, n1=1 << a, n2=1 << (p - a))
+    return DistPlan(n=n, d=num_devices, n1=1 << a, n2=1 << (p - a),
+                    natural_order=bool(natural_order), chunks=chunks)
+
+
+def resolve_overlap(n: int, num_devices: int, overlap) -> int | None:
+    """Resolve the ``overlap`` knob to a chunk count (None = monolithic).
+
+    "off" -> None. "auto" -> OVERLAP_AUTO_CHUNKS when the ring pipeline
+    can plausibly pay for itself (n >= OVERLAP_AUTO_MIN_N, ring size
+    <= OVERLAP_RING_MAX_D, slabs at least 2 wide), else None. An explicit
+    int is validated — chunks must divide both per-device slab widths
+    n1/D and n2/D so every ppermute round moves equal pieces — and is
+    honoured even where "auto" would decline (user override).
+    """
+    if overlap is None or overlap == "off":
+        return None
+    plan = plan_distributed(n, num_devices)
+    n1l, n2l = plan.n1 // plan.d, plan.n2 // plan.d
+    if overlap == "auto":
+        if (n < OVERLAP_AUTO_MIN_N or num_devices > OVERLAP_RING_MAX_D
+                or min(n1l, n2l) < 2):
+            return None
+        return min(OVERLAP_AUTO_CHUNKS, n1l, n2l)
+    if isinstance(overlap, bool) or not isinstance(overlap, int):
+        raise ValueError(
+            f"overlap must be 'auto', 'off', or a chunk count (int); "
+            f"got {overlap!r}")
+    if overlap < 1 or n1l % overlap or n2l % overlap:
+        raise ValueError(
+            f"overlap={overlap} chunks must divide both per-device slab "
+            f"widths n1/D={n1l} and n2/D={n2l} (n={n}, D={num_devices}) "
+            f"so every ppermute round rotates equal slabs")
+    return overlap
 
 
 def _axis_size(mesh: Mesh, axis_names) -> int:
@@ -88,21 +174,56 @@ def build_distributed(n: int, mesh: Mesh, axis_names=("data", "model"), *,
                       impl: str = "matfft", natural_order: bool = True,
                       fuse_twiddle: bool = False,
                       interpret: bool | None = None,
-                      layout: str = "zero_copy"):
+                      layout: str = "zero_copy",
+                      overlap: int | None = None):
     """Build the shard_map'd cross-device four-step for a length-n signal.
 
-    Returns the shard-mapped function over planar (n,) global arrays; the
-    caller (the planner) wraps it in ONE `jax.jit` and caches it.
+    ``overlap`` is the RESOLVED chunk count (see `resolve_overlap`; the
+    planner resolves "auto"). Returns the shard-mapped function over
+    planar (n,) global arrays; the caller (the planner) wraps it in ONE
+    `jax.jit` and caches it.
     """
     if isinstance(axis_names, str):
         axis_names = (axis_names,)
     d = _axis_size(mesh, axis_names)
-    plan = plan_distributed(n, d)
+    plan = plan_distributed(n, d, natural_order=natural_order,
+                            chunks=overlap)
     n1, n2 = plan.n1, plan.n2
     n1l, n2l = n1 // d, n2 // d
     ax = tuple(axis_names)
+    if overlap is not None and (n1l % overlap or n2l % overlap):
+        raise ValueError(
+            f"overlap={overlap} does not divide slab widths "
+            f"n1/D={n1l}, n2/D={n2l}")
 
-    def local(xr_loc, xi_loc):
+    def pass1(ar, ai, row0, rows):
+        """Local pass 1 on an assembled (n1, rows) column slab whose first
+        global row (i2) is ``row0``: FFT + the W_n^{i2*o1} twiddle, fused
+        into the kernel epilogue when the leaf allows it."""
+        can_fuse = (fuse_twiddle and impl == "matfft"
+                    and fft_plan.make_plan(n1).levels == 1)
+        if can_fuse:
+            row_off = row0.astype(jnp.int32).reshape(1)
+            return fft_ex.fft_cols(ar, ai, impl=impl, interpret=interpret,
+                                   global_twiddle=(n, row_off),
+                                   layout=layout)
+        ar, ai = fft_ex.fft_cols(ar, ai, impl=impl, interpret=interpret,
+                                 layout=layout)
+        # ar: (rows, n1), row j = global i2 row0 + j, cols = o1
+        i2g = row0.astype(jnp.uint32) + jnp.arange(rows, dtype=jnp.uint32)
+        tw_r, tw_i = _twiddle(i2g, jnp.arange(n1, dtype=jnp.uint32), n)
+        return ar * tw_r - ai * tw_i, ar * tw_i + ai * tw_r
+
+    def pass2(br, bi, out_major, col_offset=0, ncols=None):
+        """Local pass 2 on (n2, n1l): FFT each length-n2 column. The
+        o2-major ("col") store is what exchange #3 consumes directly, so
+        the old `cr.T.reshape(-1)` HBM transpose epilogue is folded into
+        the kernel's out_major store."""
+        return fft_ex.fft_cols(br, bi, impl=impl, interpret=interpret,
+                               layout=layout, out_major=out_major,
+                               col_offset=col_offset, ncols=ncols)
+
+    def local_monolithic(xr_loc, xi_loc):
         # Device-local shard: contiguous rows of the (n1, n2) matrix.
         didx = lax.axis_index(ax)
 
@@ -110,7 +231,7 @@ def build_distributed(n: int, mesh: Mesh, axis_names=("data", "model"), *,
             return lax.all_to_all(a, ax, split_axis=1, concat_axis=0,
                                   tiled=True)
 
-        # ---- a2a #1: (n1l, n2) -> (n1, n2l): full columns arrive ----
+        # ---- xchg #1: (n1l, n2) -> (n1, n2l): full columns arrive ----
         ar = a2a(xr_loc.reshape(n1l, n2))
         ai = a2a(xi_loc.reshape(n1l, n2))
 
@@ -118,42 +239,129 @@ def build_distributed(n: int, mesh: Mesh, axis_names=("data", "model"), *,
         # fft_cols folds the local transpose into the kernel's BlockSpec:
         # with layout="zero_copy" the (n1, n2l) shard is read column-strided
         # and the (n2l, n1) result written row-major, no `.T` copy in HBM.
-        can_fuse = (fuse_twiddle and impl == "matfft"
-                    and fft_plan.make_plan(n1).levels == 1)
-        if can_fuse:
-            # twiddle W_n^{i2_global*o1} fused into the kernel epilogue:
-            # rows of this batch are i2-local, so the kernel's global row
-            # offset is didx*n2l; the table is never materialized in HBM
-            row_off = (didx * n2l).astype(jnp.int32).reshape(1)
-            br, bi = fft_ex.fft_cols(ar, ai, impl=impl, interpret=interpret,
-                                     global_twiddle=(n, row_off),
-                                     layout=layout)
-        else:
-            ar, ai = fft_ex.fft_cols(ar, ai, impl=impl, interpret=interpret,
-                                     layout=layout)
-            # ar: (n2l, n1), rows = local i2, cols = o1
-            # ---- twiddle W_n^{i2_global * o1}, computed on the fly ----
-            i2g = didx * n2l + jnp.arange(n2l, dtype=jnp.uint32)
-            tw_r, tw_i = _twiddle(i2g, jnp.arange(n1, dtype=jnp.uint32), n)
-            br = ar * tw_r - ai * tw_i
-            bi = ar * tw_i + ai * tw_r
+        br, bi = pass1(ar, ai, didx * n2l, n2l)
 
-        # ---- a2a #2: (n2l, n1) -> (n2, n1l): full rows arrive ----
+        # ---- xchg #2: (n2l, n1) -> (n2, n1l): full rows arrive ----
         br, bi = a2a(br), a2a(bi)
 
-        # ---- pass 2: FFT rows (length n2), batched over n1l ----
-        cr, ci = fft_ex.fft_cols(br, bi, impl=impl, interpret=interpret,
-                                 layout=layout)
-        # cr: (n1l, n2), rows = local o1, cols = o2
-
         if not natural_order:
+            # ---- pass 2, row-major out: (n1l, n2) = [o1_loc, o2] ----
+            cr, ci = pass2(br, bi, "row")
             return cr.reshape(-1), ci.reshape(-1)
 
-        # ---- a2a #3: (n1l, n2) -> (n1, n2l), then o2-major flatten ----
-        cr, ci = a2a(cr), a2a(ci)
-        # (n1, n2l)[o1, o2_loc] -> out[o2*n1 + o1]: transpose then flatten.
-        return cr.T.reshape(-1), ci.T.reshape(-1)
+        # ---- pass 2, o2-major out: (n2, n1l) = [o2, o1_loc] ----
+        cr, ci = pass2(br, bi, "col")
 
+        # ---- xchg #3: split o2 rows, concat o1 cols -> (n2l, n1) ----
+        # the received layout IS the o2-major output shard: flatten free.
+        def a2a_t(a):
+            return lax.all_to_all(a, ax, split_axis=0, concat_axis=1,
+                                  tiled=True)
+
+        cr, ci = a2a_t(cr), a2a_t(ci)
+        return cr.reshape(-1), ci.reshape(-1)
+
+    def local_overlapped(xr_loc, xi_loc):
+        k = overlap
+        n2c, n1c = n2l // k, n1l // k
+        didx = lax.axis_index(ax)
+        xr2 = xr_loc.reshape(n1l, n2)
+        xi2 = xi_loc.reshape(n1l, n2)
+
+        def zeros(shape):
+            return (jnp.zeros(shape, jnp.float32),
+                    jnp.zeros(shape, jnp.float32))
+
+        def ring(take, place, bufs):
+            """One slab exchange: D-1 direct ppermute rounds + the local
+            piece. Round r rotates by r — device d sends `take((d+r)%D)`
+            and receives source (d-r)%D's piece, placed by `place`. The
+            rounds carry independent data (no chained buffer), so the
+            scheduler can run them concurrently with each other and with
+            the previous slab's FFT."""
+            bufs = place(bufs, take(didx), didx)
+            for r in range(1, d):
+                perm = [(s, (s + r) % d) for s in range(d)]
+                pr, pi = take((didx + r) % d)
+                rr = lax.ppermute(pr, ax, perm)
+                ri = lax.ppermute(pi, ax, perm)
+                bufs = place(bufs, (rr, ri), (didx - r) % d)
+            return bufs
+
+        # ---- xchg #1 slab c: global columns didx*n2l + c-slab ----
+        def take1(c):
+            def take(dest):
+                start = dest * n2l + c * n2c
+                return (lax.dynamic_slice(xr2, (0, start), (n1l, n2c)),
+                        lax.dynamic_slice(xi2, (0, start), (n1l, n2c)))
+            return take
+
+        def place1(bufs, piece, s):
+            # source s owns global rows [s*n1l, (s+1)*n1l)
+            return (lax.dynamic_update_slice(bufs[0], piece[0],
+                                             (s * n1l, 0)),
+                    lax.dynamic_update_slice(bufs[1], piece[1],
+                                             (s * n1l, 0)))
+
+        # ---- xchg #2 slab c: pass-1 rows c-slab into the (n2, n1l)
+        # accumulator (row i2 = s*n2l + c*n2c + j for source s) ----
+        def take2(br, bi):
+            def take(dest):
+                return (lax.dynamic_slice(br, (0, dest * n1l), (n2c, n1l)),
+                        lax.dynamic_slice(bi, (0, dest * n1l), (n2c, n1l)))
+            return take
+
+        def place2(c):
+            def place(bufs, piece, s):
+                at = (s * n2l + c * n2c, 0)
+                return (lax.dynamic_update_slice(bufs[0], piece[0], at),
+                        lax.dynamic_update_slice(bufs[1], piece[1], at))
+            return place
+
+        # Software pipeline over slabs (double buffer): slab c+1's rounds
+        # are issued before slab c's FFT, so its transfers have a full
+        # kernel's worth of compute to hide behind; slab c's pass-1 output
+        # immediately feeds its xchg #2 rounds, which hide behind slab
+        # c+1's FFT. Only slab 0's arrival and the final slab's FFT are
+        # structurally exposed.
+        arrived = [None] * k
+        arrived[0] = ring(take1(0), place1, zeros((n1, n2c)))
+        acc2 = zeros((n2, n1l))
+        for c in range(k):
+            if c + 1 < k:
+                arrived[c + 1] = ring(take1(c + 1), place1,
+                                      zeros((n1, n2c)))
+            br, bi = pass1(*arrived[c], didx * n2l + c * n2c, n2c)
+            acc2 = ring(take2(br, bi), place2(c), acc2)
+        a2r, a2i = acc2
+
+        if not natural_order:
+            cr, ci = pass2(a2r, a2i, "row")
+            return cr.reshape(-1), ci.reshape(-1)
+
+        # ---- pass 2 slab j (columns j-slab of (n2, n1l), read in place
+        # via the kernel's col_offset — no retile) + xchg #3 slab j ----
+        def take3(cr, ci):
+            def take(dest):
+                return (lax.dynamic_slice(cr, (dest * n2l, 0), (n2l, n1c)),
+                        lax.dynamic_slice(ci, (dest * n2l, 0), (n2l, n1c)))
+            return take
+
+        def place3(j):
+            def place(bufs, piece, s):
+                at = (0, s * n1l + j * n1c)
+                return (lax.dynamic_update_slice(bufs[0], piece[0], at),
+                        lax.dynamic_update_slice(bufs[1], piece[1], at))
+            return place
+
+        out = zeros((n2l, n1))
+        for j in range(k):
+            cr, ci = pass2(a2r, a2i, "col", col_offset=j * n1c, ncols=n1c)
+            out = ring(take3(cr, ci), place3(j), out)
+        outr, outi = out
+        return outr.reshape(-1), outi.reshape(-1)
+
+    local = local_monolithic if overlap is None else local_overlapped
     spec = P(ax)
     # check_vma=False: pallas_call out_shapes do not carry vma metadata.
     return compat.shard_map(local, mesh=mesh, in_specs=(spec, spec),
@@ -164,20 +372,23 @@ def distributed_fft(xr: jnp.ndarray, xi: jnp.ndarray, mesh: Mesh,
                     axis_names=("data", "model"), *, impl: str = "matfft",
                     natural_order: bool = True, fuse_twiddle: bool = False,
                     interpret: bool | None = None,
-                    layout: str = "zero_copy"):
+                    layout: str = "zero_copy", overlap="auto"):
     """Forward FFT of a single length-n planar signal sharded over ``mesh``.
 
     Args:
       xr, xi: (n,) float32 planes (global arrays; pjit/shard_map shards them
         along the flattened ``axis_names``).
-      natural_order: if False, skip all_to_all #3 and return the transform
+      natural_order: if False, skip exchange #3 and return the transform
         in transposed (o1-major) block order — FFTW's TRANSPOSED_OUT, useful
         when a subsequent pointwise op + inverse FFT follows (convolution).
       layout: "zero_copy" folds the local `.T` at each pass boundary into
-        the column-strided Pallas kernel (fft_cols) — the all_to_all
-        already did the cross-device transpose, so no device-local
-        transposed copy is materialized either; "copy" keeps the legacy
-        materialized transposes (measured baseline).
+        the column-strided Pallas kernel (fft_cols) — the exchange already
+        did the cross-device transpose, so no device-local transposed copy
+        is materialized either; "copy" keeps the legacy materialized
+        transposes (measured baseline).
+      overlap: "auto" | "off" | int chunk count — "off" keeps the three
+        monolithic all_to_alls; a chunk count pipelines each exchange as
+        ppermute slab rounds hidden behind the local FFTs (DESIGN.md §8).
     Returns planar (n,) arrays, sharded like the input.
 
     Thin wrapper over `repro.fft.plan(placement="distributed")`: repeat
@@ -188,12 +399,27 @@ def distributed_fft(xr: jnp.ndarray, xi: jnp.ndarray, mesh: Mesh,
     p = fft_api.plan(kind="c2c", n=xr.shape[-1], batch_shape=(), mesh=mesh,
                      placement="distributed", axes=axis_names, impl=impl,
                      natural_order=natural_order, fuse_twiddle=fuse_twiddle,
-                     interpret=interpret, layout=layout)
+                     interpret=interpret, layout=layout, overlap=overlap)
     return p.execute(xr, xi)
 
 
 def distributed_ifft(xr, xi, mesh, axis_names=("data", "model"), **kw):
-    """Inverse via conjugation identity, sharded like distributed_fft."""
-    n = xr.shape[-1]
-    yr, yi = distributed_fft(xr, -xi, mesh, axis_names, **kw)
-    return yr / n, -yi / n
+    """Inverse FFT, sharded like distributed_fft.
+
+    Routes through the cached plan's `execute_inverse` (the conjugation
+    identity lives inside the plan's own jit), so an inverse call is ONE
+    facade round-trip instead of re-entering `distributed_fft` with
+    negated planes and paying plan resolution + dispatch twice.
+
+    Behavior change vs the pre-facade wrapper: `natural_order=False` now
+    fails fast with NotImplementedError (execute_inverse's plan-level
+    rule) instead of silently returning the inverse in transposed block
+    order — the old behavior inverted a round-tripped TRANSPOSED_OUT
+    spectrum incorrectly, since the conjugation identity needs the
+    forward's natural output order. Plan the inverse leg with
+    natural_order=True.
+    """
+    import repro.fft as fft_api
+    p = fft_api.plan(kind="c2c", n=xr.shape[-1], batch_shape=(), mesh=mesh,
+                     placement="distributed", axes=axis_names, **kw)
+    return p.execute_inverse(xr, xi)

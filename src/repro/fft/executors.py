@@ -162,27 +162,49 @@ def _four_step(xr, xi, n1: int, n2: int, impl: str, interpret: bool,
 
 def fft_cols(xr: jnp.ndarray, xi: jnp.ndarray, *, impl: str = "matfft",
              interpret: bool | None = None, col_tile: int | None = None,
-             global_twiddle=None, layout: str = "zero_copy") -> Planar:
-    """FFT each COLUMN of planar (L, C) arrays; returns (C, L) row-major.
+             global_twiddle=None, layout: str = "zero_copy",
+             out_major: str = "row", col_offset: int = 0,
+             ncols: int | None = None) -> Planar:
+    """FFT each COLUMN of planar (L, C) arrays.
 
-    Semantically ``fft(xr.T, xi.T)``, but with layout="zero_copy" the
-    column-strided Pallas kernel reads the operand in place and writes
-    row-major output directly — the materialized `.T` copies at
-    distributed-FFT pass boundaries fold into the kernel (DESIGN.md §3).
+    Returns (C', L) row-major for ``out_major="row"`` or (L, C')
+    column-major for ``out_major="col"`` (C' = ncols when a slab is
+    selected). Semantically ``fft(xr.T, xi.T)`` (transposed again for
+    "col"), but with layout="zero_copy" the column-strided Pallas kernel
+    reads the operand in place and writes the requested layout directly —
+    the materialized `.T` copies at distributed-FFT pass boundaries fold
+    into the kernel (DESIGN.md §3).
+
+    ``col_offset``/``ncols`` restrict the call to the column slab
+    ``[col_offset, col_offset + ncols)``: on the zero-copy path the
+    BlockSpec index map fetches the slab from the full operand in place
+    (no retile); the fallback slices (it already materializes a copy).
     """
     interpret_b = _auto_interpret(interpret)
     L, C = xr.shape
+    nc = C - col_offset if ncols is None else ncols
     if (layout == "zero_copy" and impl == "matfft" and L > 1
-            and fft_plan.is_pow2(C)
+            and fft_plan.is_pow2(C) and fft_plan.is_pow2(nc)
             and fft_plan.make_plan(L).levels == 1):
-        return matfft_cols(xr.reshape(1, L, C), xi.reshape(1, L, C),
-                           out_major="row", global_twiddle=global_twiddle,
-                           col_tile=col_tile, interpret=interpret_b)
+        yr, yi = matfft_cols(xr.reshape(1, L, C), xi.reshape(1, L, C),
+                             out_major=out_major,
+                             global_twiddle=global_twiddle,
+                             col_tile=col_tile, col_offset=col_offset,
+                             ncols=nc, interpret=interpret_b)
+        if out_major == "col":
+            return yr.reshape(L, nc), yi.reshape(L, nc)
+        return yr, yi
     # fallback materializes the transpose; the columns become batch rows,
     # so the caller's tile request carries over as batch_tile
-    return fft(xr.T, xi.T, impl=impl, interpret=interpret,
-               batch_tile=col_tile, global_twiddle=global_twiddle,
-               layout=layout)
+    if col_offset or nc != C:
+        xr = xr[:, col_offset:col_offset + nc]
+        xi = xi[:, col_offset:col_offset + nc]
+    yr, yi = fft(xr.T, xi.T, impl=impl, interpret=interpret,
+                 batch_tile=col_tile, global_twiddle=global_twiddle,
+                 layout=layout)
+    if out_major == "col":
+        return yr.T, yi.T
+    return yr, yi
 
 
 def ifft(xr: jnp.ndarray, xi: jnp.ndarray, **kw) -> Planar:

@@ -70,7 +70,9 @@ class ExecutablePlan:
         if spec.placement == "distributed":
             from repro.core.fft.distributed import plan_distributed
             num_devices = math.prod(mesh.shape[a] for a in spec.axes)
-            self.dist = plan_distributed(spec.n, num_devices)
+            self.dist = plan_distributed(
+                spec.n, num_devices, natural_order=spec.natural_order,
+                chunks=None if spec.overlap == "off" else spec.overlap)
             # the local factorization covers the longest per-device pass —
             # global n can exceed MAX_LEAF**2 (up to 2^32), each pass can't
             local_n = max(self.dist.n1, self.dist.n2)
@@ -195,11 +197,30 @@ class ExecutablePlan:
 
     @property
     def collective_bytes(self) -> int:
-        """Total planar payload crossing ICI (distributed placement only)."""
+        """Total planar payload crossing ICI (distributed placement only).
+
+        Mirrors `DistPlan.collective_bytes_per_device`, which now folds the
+        exchange count — transposed-out plans (natural_order=False) skip
+        exchange #3 and report one leg fewer.
+        """
         if self.dist is None:
             return 0
-        n_a2a = 3 if self.spec.natural_order else 2
-        return n_a2a * self.dist.d * self.dist.collective_bytes_per_device
+        return self.dist.d * self.dist.collective_bytes_per_device
+
+    @property
+    def exposed_collective_bytes(self) -> int:
+        """Collective bytes the overlap pipeline cannot hide (fill/drain
+        slab per exchange — `DistPlan.exposed_collective_bytes_per_device`).
+        Equal to `collective_bytes` for overlap="off" plans."""
+        if self.dist is None:
+            return 0
+        return self.dist.d * self.dist.exposed_collective_bytes_per_device
+
+    @property
+    def hidden_collective_bytes(self) -> int:
+        """Collective bytes the chunked ppermute pipeline overlaps with
+        local MXU compute (the predicted overlap win's numerator)."""
+        return self.collective_bytes - self.exposed_collective_bytes
 
     # ------------------------------------------------------------------
     # executables
@@ -248,7 +269,8 @@ class ExecutablePlan:
             inner = distributed.build_distributed(
                 s.n, self.mesh, s.axes, impl=s.impl,
                 natural_order=s.natural_order, fuse_twiddle=s.fuse_twiddle,
-                interpret=s.interpret, layout=s.layout)
+                interpret=s.interpret, layout=s.layout,
+                overlap=None if s.overlap == "off" else s.overlap)
 
         def counted(*args):
             # python side effect: runs once per trace OF THIS PLAN'S JIT,
@@ -437,7 +459,7 @@ def plan(kind: str = "c2c", *, n: int, batch_shape=(), mesh=None,
          impl: str = "matfft", precision: str = "f32",
          interpret: bool | None = None, batch_tile: int | None = None,
          axes=None, natural_order: bool = True,
-         fuse_twiddle: bool = False) -> ExecutablePlan:
+         fuse_twiddle: bool = False, overlap="auto") -> ExecutablePlan:
     """Resolve a transform spec and return the cached `ExecutablePlan`.
 
     Args:
@@ -457,6 +479,13 @@ def plan(kind: str = "c2c", *, n: int, batch_shape=(), mesh=None,
       axes: mesh axes to use; None = every axis of the mesh.
       natural_order / fuse_twiddle: distributed-placement options
         (DESIGN.md §2; ignored elsewhere).
+      overlap: distributed-placement exchange engine (DESIGN.md §8):
+        "off" = monolithic all_to_alls; an int = that many ppermute
+        pipeline slabs per exchange, hidden behind the local FFTs (must
+        divide n1/D and n2/D — validated at plan time); "auto" picks a
+        chunk count or "off" from n and the ring size. Resolved before
+        the cache key, so overlap="auto" and the equivalent explicit
+        value share one plan.
 
     Same resolved spec (and mesh) -> the SAME plan object, with its jit'd
     executables and twiddle tables already built.
@@ -486,7 +515,8 @@ def plan(kind: str = "c2c", *, n: int, batch_shape=(), mesh=None,
         kind=kind, n=n, batch_shape=batch_shape, placement=placement,
         layout=layout, impl=impl, precision=precision, interpret=interpret,
         batch_tile=batch_tile, num_devices=num_devices, axes=axes,
-        natural_order=natural_order, fuse_twiddle=fuse_twiddle)
+        natural_order=natural_order, fuse_twiddle=fuse_twiddle,
+        overlap=overlap)
 
     # local plans don't touch the mesh -> key them mesh-free so the same
     # spec planned with and without a mesh unifies

@@ -3,10 +3,13 @@
     PYTHONPATH=src python -m repro.fft.selftest
 
 Plans + executes c2c and r2c at every placement the container can host —
-leaf (level 0), four-step (level 1), and segmented over an 8-device CPU
-mesh — in interpret mode, checks each against the numpy oracle, and
-verifies the plan cache never retraces. Exit code 0 = all pass. Wired into
-test.sh and the CI workflow as the facade's cheap end-to-end gate.
+leaf (level 0), four-step (level 1), segmented and distributed over an
+8-device CPU mesh — in interpret mode, checks each against the numpy
+oracle, and verifies the plan cache never retraces. The distributed case
+runs BOTH exchange engines (overlap="off" monolithic all_to_alls and an
+overlapped ppermute pipeline) and asserts their outputs are bitwise
+identical. Exit code 0 = all pass. Wired into test.sh and the CI workflow
+as the facade's cheap end-to-end gate.
 """
 
 import os
@@ -72,6 +75,33 @@ def main() -> int:
         sr, si = pr.execute_real(jnp.asarray(x))
         pr.execute_real(jnp.asarray(x))
         ok &= _check(f"r2c/{label}", _rel_err(sr, si, np.fft.rfft(x)), pr)
+
+    # distributed: cross-device four-step, both exchange engines. The
+    # overlapped ppermute pipeline must match the monolithic all_to_all
+    # path bit for bit — same kernels, the exchange is pure data movement.
+    nd = 4096
+    xr = rng.standard_normal(nd).astype(np.float32)
+    xi = rng.standard_normal(nd).astype(np.float32)
+    want = np.fft.fft(xr + 1j * xi)
+    p_off = fft_api.plan(kind="c2c", n=nd, mesh=mesh,
+                         placement="distributed", overlap="off",
+                         interpret=True)
+    yr0, yi0 = p_off.execute(jnp.asarray(xr), jnp.asarray(xi))
+    p_off.execute(jnp.asarray(xr), jnp.asarray(xi))
+    ok &= _check("c2c/dist_off", _rel_err(yr0, yi0, want), p_off)
+
+    p_on = fft_api.plan(kind="c2c", n=nd, mesh=mesh,
+                        placement="distributed", overlap=4, interpret=True)
+    yr1, yi1 = p_on.execute(jnp.asarray(xr), jnp.asarray(xi))
+    p_on.execute(jnp.asarray(xr), jnp.asarray(xi))
+    ok &= _check("c2c/dist_overlap4", _rel_err(yr1, yi1, want), p_on)
+    bitwise = bool((np.asarray(yr1) == np.asarray(yr0)).all()
+                   and (np.asarray(yi1) == np.asarray(yi0)).all())
+    print(f"selftest dist overlap==off bitwise     "
+          f"{'OK' if bitwise else 'FAIL'} "
+          f"(exposed {p_on.exposed_collective_bytes} of "
+          f"{p_on.collective_bytes} collective bytes)")
+    ok &= bitwise
 
     info = fft_api.cache_info()
     print(f"selftest plan cache: {info['misses']} built, "

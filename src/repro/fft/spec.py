@@ -56,6 +56,8 @@ class FftSpec:
     axes: tuple | None            # mesh axes (segmented batch / distributed)
     natural_order: bool           # distributed only: all_to_all #3 or not
     fuse_twiddle: bool            # distributed only: twiddle in leaf epilogue
+    overlap: object = "off"       # distributed only: "off" | int chunks
+    #                               ("auto" is resolved here, pre-cache-key)
 
     @property
     def rows(self) -> int:
@@ -118,7 +120,8 @@ def _validate_distributed(n: int, num_devices: int, axes) -> None:
 def resolve(kind: str, n: int, batch_shape, placement: str, layout: str,
             impl: str, precision: str, interpret: bool | None,
             batch_tile: int | None, num_devices: int | None, axes,
-            natural_order: bool, fuse_twiddle: bool) -> FftSpec:
+            natural_order: bool, fuse_twiddle: bool,
+            overlap="auto") -> FftSpec:
     """Validate + normalize everything into a frozen FftSpec."""
     if kind not in KINDS:
         raise ValueError(f"unknown kind {kind!r}; expected one of {KINDS}")
@@ -183,13 +186,25 @@ def resolve(kind: str, n: int, batch_shape, placement: str, layout: str,
                 f"placement='segmented' for batches")
         _validate_distributed(n, num_devices, axes)
 
+    if placement == "distributed":
+        # resolve "auto" and validate explicit chunk counts NOW, so an
+        # indivisible chunks value is a plan-time ValueError and the
+        # resolved spec (the cache key) never carries "auto". Lazy import:
+        # the strategy module imports executors, not this spec module.
+        from repro.core.fft.distributed import resolve_overlap
+        chunks = resolve_overlap(n, num_devices, overlap)
+        overlap = "off" if chunks is None else int(chunks)
+    else:
+        overlap = "off"
+
     spec = FftSpec(kind=kind, n=n, batch_shape=batch_shape,
                    placement=placement, layout=layout, impl=impl,
                    precision=precision, interpret=interpret,
                    batch_tile=batch_tile,
                    axes=tuple(axes) if axes is not None else None,
                    natural_order=bool(natural_order),
-                   fuse_twiddle=bool(fuse_twiddle))
+                   fuse_twiddle=bool(fuse_twiddle),
+                   overlap=overlap)
     # normalize placement-irrelevant knobs so equivalent specs cache-hit
     if placement != "distributed":
         spec = replace(spec, natural_order=True, fuse_twiddle=False)

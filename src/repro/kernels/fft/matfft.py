@@ -286,12 +286,23 @@ def _col_kernel(*refs, direct: bool, n1: int, n2: int, cols: int,
 
     xr = xr_ref[...][0].T  # (1, L, ct) -> (ct, L): VMEM transpose, not HBM
     xi = xi_ref[...][0].T
+    # A 1-row tile would contract on XLA's M=1 GEMV path, whose accumulation
+    # order differs from the GEMM path every wider tile takes. Pad to M=2 in
+    # VMEM (per-row GEMM results are independent of other rows' values), so
+    # single-column slab calls stay bitwise equal to the monolithic kernel —
+    # the overlapped distributed pipeline's chunks=n2l edge relies on this.
+    squeeze = xr.shape[0] == 1
+    if squeeze:
+        xr = jnp.concatenate([xr, jnp.zeros_like(xr)], axis=0)
+        xi = jnp.concatenate([xi, jnp.zeros_like(xi)], axis=0)
     if direct:
         yr, yi = _tile_dft_direct(xr, xi, wr_ref[...], wi_ref[...])
     else:
         yr, yi = _tile_dft_4step(xr, xi, w1r_ref[...], w1i_ref[...],
                                  tr_ref[...], ti_ref[...],
                                  w2r_ref[...], w2i_ref[...], n1=n1, n2=n2)
+    if squeeze:
+        yr, yi = yr[:1], yi[:1]
 
     if global_n:
         # logical row of this tile's first output = b*C + j*ct
@@ -314,7 +325,8 @@ def _col_kernel(*refs, direct: bool, n1: int, n2: int, cols: int,
 def matfft_cols(xr: jnp.ndarray, xi: jnp.ndarray, *, out_major: str = "row",
                 epilogue: tuple[jnp.ndarray, jnp.ndarray] | None = None,
                 global_twiddle: tuple[int, jnp.ndarray] | None = None,
-                col_tile: int | None = None,
+                col_tile: int | None = None, col_offset: int = 0,
+                ncols: int | None = None,
                 interpret: bool = True) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Batched forward DFT along the MIDDLE axis of planar (B, L, C) arrays.
 
@@ -324,15 +336,21 @@ def matfft_cols(xr: jnp.ndarray, xi: jnp.ndarray, *, out_major: str = "row",
 
     Args:
       xr, xi: float32 (B, L, C) planes; L a pow2 <= plan.MAX_LEAF, C pow2.
-      out_major: "row" returns (B*C, L) row-major (row index b*C + c);
-        "col" returns (B, L, C) with out[b, o, c] — i.e. the result is
+      out_major: "row" returns (B*ncols, L) row-major (row index b*ncols + c);
+        "col" returns (B, L, ncols) with out[b, o, c] — i.e. the result is
         written back in column order, which is exactly the o2-major store
         the four-step's final reorder needs.
       epilogue: optional planar (C, L) table; output row (b, c) is
-        multiplied by ``epilogue[c]`` (period == C by construction).
+        multiplied by ``epilogue[col_offset + c]`` (period == C).
       global_twiddle: (n_global, row_off) — on-the-fly distributed twiddle
-        for logical row ``row_off + b*C + c`` (see _global_twiddle).
+        for logical row ``row_off + b*ncols + c`` (see _global_twiddle).
       col_tile: columns per kernel instance (defaults to a VMEM-sized tile).
+      col_offset, ncols: transform only the column slab
+        ``[col_offset, col_offset + ncols)``, fetched from the full operand
+        by the BlockSpec index map — a per-slab call reads the big buffer
+        in place instead of forcing XLA to materialize (retile) a slice.
+        The overlapped distributed pipeline's pass-2 slabs use this. Both
+        must be pow2-aligned (ncols pow2, col_offset a multiple of it).
     """
     if xr.ndim != 3:
         raise ValueError(f"matfft_cols expects 3-D (B, L, C), got {xr.shape}")
@@ -344,14 +362,22 @@ def matfft_cols(xr: jnp.ndarray, xi: jnp.ndarray, *, out_major: str = "row",
         raise ValueError(f"column count must be a power of two, got {C}")
     if out_major not in ("row", "col"):
         raise ValueError(f"unknown out_major {out_major!r}")
+    nc = C - col_offset if ncols is None else ncols
+    if not fft_plan.is_pow2(nc):
+        raise ValueError(f"ncols must be a power of two, got {nc}")
+    if col_offset % nc or col_offset + nc > C:
+        raise ValueError(
+            f"column slab [{col_offset}, {col_offset + nc}) must be an "
+            f"aligned pow2 slab of the {C} columns")
 
-    ct = min(col_tile or default_batch_tile(L), C)
-    # round down to a power of two so ct always divides C (validated pow2):
+    ct = min(col_tile or default_batch_tile(L), nc)
+    # round down to a power of two so ct always divides nc (validated pow2):
     # a ragged tile would leave trailing output blocks unwritten
     ct = 1 << (ct.bit_length() - 1)
-    grid = (B, C // ct)
+    grid = (B, nc // ct)
+    off_blocks = col_offset // ct  # exact: ct | nc | col_offset
 
-    in_spec = pl.BlockSpec((1, L, ct), lambda b, j: (b, 0, j))
+    in_spec = pl.BlockSpec((1, L, ct), lambda b, j: (b, 0, j + off_blocks))
 
     g_n = 0
     if global_twiddle is not None:
@@ -363,7 +389,7 @@ def matfft_cols(xr: jnp.ndarray, xi: jnp.ndarray, *, out_major: str = "row",
         if er.shape != (C, L):
             raise ValueError(f"epilogue must be (C, L)=({C}, {L}), "
                              f"got {er.shape}")
-        epi_spec = pl.BlockSpec((ct, L), lambda b, j: (j, 0))
+        epi_spec = pl.BlockSpec((ct, L), lambda b, j: (j + off_blocks, 0))
     elif g_n:
         er = row_off.reshape(1).astype(jnp.int32)
         ei = jnp.zeros((1,), jnp.int32)
@@ -373,18 +399,18 @@ def matfft_cols(xr: jnp.ndarray, xi: jnp.ndarray, *, out_major: str = "row",
         epi_spec = pl.BlockSpec((ct, L), lambda b, j: (0, 0))
 
     if out_major == "row":
-        out_shape = [jax.ShapeDtypeStruct((B * C, L), jnp.float32)] * 2
-        blocks_per_b = C // ct
+        out_shape = [jax.ShapeDtypeStruct((B * nc, L), jnp.float32)] * 2
+        blocks_per_b = nc // ct
         out_spec = pl.BlockSpec((ct, L),
                                 lambda b, j: (b * blocks_per_b + j, 0))
     else:
-        out_shape = [jax.ShapeDtypeStruct((B, L, C), jnp.float32)] * 2
+        out_shape = [jax.ShapeDtypeStruct((B, L, nc), jnp.float32)] * 2
         out_spec = pl.BlockSpec((1, L, ct), lambda b, j: (b, 0, j))
 
     def table_spec(shape):
         return pl.BlockSpec(shape, lambda b, j: tuple(0 for _ in shape))
 
-    common = dict(cols=C, col_tile=ct, out_major=out_major,
+    common = dict(cols=nc, col_tile=ct, out_major=out_major,
                   fuse_epilogue=fuse, global_n=g_n)
     if L <= DIRECT_N:
         wr, wi = (jnp.asarray(a) for a in fft_plan.dft_matrix(L))

@@ -17,11 +17,21 @@ costs are exact — no scans in this path):
   dist_transposed + natural_order=False (skip all_to_all #3, FFTW
                  TRANSPOSED_OUT) for convolution-style consumers
 
+Each distributed record also carries the plan's exposed-vs-total
+collective split, and a `dist_overlap*_analytic` record reports the
+PREDICTED win of the chunked ppermute pipeline (DESIGN.md §8) from the
+analytic cost model alone — the overlapped executable is never compiled
+here: its ring unrolls D-1 collective-permutes per slab, which at 512
+devices is exactly the regime `overlap="auto"` declines (the same reason
+this dryrun would take hours to lower it). benchmarks/bench_distributed.py
+compiles + executes the pipeline on the 8-device mesh.
+
   PYTHONPATH=src python -m repro.launch.fft_dryrun --n 268435456
 """
 
 import argparse
 import json
+import math
 
 import jax
 import jax.numpy as jnp
@@ -57,6 +67,7 @@ def measure(plan, args_abs, name):
         "plan_flops": plan.flops,
         "plan_hbm_bytes": plan.hbm_bytes,
         "plan_collective_bytes": plan.collective_bytes,
+        "plan_exposed_collective_bytes": plan.exposed_collective_bytes,
     }
     rec["bound"] = max(("compute_s", "memory_s", "collective_s"),
                        key=lambda k: rec[k])
@@ -94,8 +105,30 @@ def main(argv=None):
         ("dist_transposed", dict(natural_order=False, fuse_twiddle=True)),
     ):
         p = fft_api.plan(kind="c2c", n=args.n, mesh=mesh,
-                         placement="distributed", axes=axes, **kw)
+                         placement="distributed", axes=axes, overlap="off",
+                         **kw)
         recs.append(measure(p, (sig, sig), name))
+
+    # predicted overlap win, analytic only (module docstring): plan the
+    # chunked pipeline — never lower it — and report what its cost model
+    # says the monolithic path leaves exposed on the ICI critical path
+    from repro.core.fft.distributed import plan_distributed
+    dp = plan_distributed(args.n, math.prod(mesh.shape[a] for a in axes))
+    chunks = min(4, dp.n1 // dp.d, dp.n2 // dp.d)  # valid for any --n
+    p_ov = fft_api.plan(kind="c2c", n=args.n, mesh=mesh,
+                        placement="distributed", axes=axes,
+                        natural_order=True, fuse_twiddle=True,
+                        overlap=chunks)
+    recs.append({
+        "name": f"dist_overlap{chunks}_analytic",
+        "analytic_only": True,
+        "plan_collective_bytes": p_ov.collective_bytes,
+        "plan_exposed_collective_bytes": p_ov.exposed_collective_bytes,
+        "plan_hidden_collective_bytes": p_ov.hidden_collective_bytes,
+        "collective_s": p_ov.collective_bytes / ICI,
+        "exposed_collective_s": p_ov.exposed_collective_bytes / ICI,
+        "predicted_overlap_win_s": p_ov.hidden_collective_bytes / ICI,
+    })
 
     for r in recs:
         print(json.dumps(r))

@@ -27,4 +27,12 @@ if [[ $# -eq 0 && -z "${REPRO_SKIP_PIPELINE_BENCH:-}" ]]; then
   python benchmarks/bench_pipeline.py --quick
 fi
 
+# distributed-FFT overlap gate: chunked ppermute pipeline must be bitwise
+# equal to the monolithic all_to_all path and strictly faster on the
+# deterministic ICI/MXU schedule model (BENCH_distributed.json; exits
+# nonzero on regression). Same skip rules as the other gates.
+if [[ $# -eq 0 && -z "${REPRO_SKIP_DISTRIBUTED_BENCH:-}" ]]; then
+  python benchmarks/bench_distributed.py --quick
+fi
+
 exec python -m pytest -x -q "$@"

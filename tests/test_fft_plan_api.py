@@ -287,6 +287,90 @@ def test_shims_accept_degenerate_lengths(rng):
     assert out.shape[0] == 2
 
 
+def test_overlap_resolution_and_rejection():
+    # pure spec-level: runs regardless of this host's device count
+    from repro.core.fft.distributed import (
+        OVERLAP_AUTO_MIN_N, OVERLAP_RING_MAX_D, plan_distributed,
+        resolve_overlap)
+    # auto declines small n, huge rings, and 1-wide slabs
+    assert resolve_overlap(4096, 8, "auto") is None
+    assert resolve_overlap(OVERLAP_AUTO_MIN_N, 8, "auto") == 4
+    assert resolve_overlap(OVERLAP_AUTO_MIN_N, 2 * OVERLAP_RING_MAX_D,
+                           "auto") is None
+    assert resolve_overlap(1 << 30, 8, "off") is None
+    # explicit chunk counts are honoured where auto declines, but must
+    # divide both per-device slab widths (n=4096, D=8 -> n1l = n2l = 8)
+    assert resolve_overlap(4096, 8, 8) == 8
+    for bad in (0, -1, 3, 16, "weird", 2.5, True):
+        with pytest.raises(ValueError, match="overlap"):
+            resolve_overlap(4096, 8, bad)
+    # ... and surface through spec resolution as plan-time errors
+    from repro.fft import spec as spec_mod
+    with pytest.raises(ValueError, match="divide both"):
+        spec_mod.resolve(kind="c2c", n=4096, batch_shape=(),
+                         placement="distributed", layout="zero_copy",
+                         impl="matfft", precision="f32", interpret=None,
+                         batch_tile=None, num_devices=8, axes=("data",),
+                         natural_order=True, fuse_twiddle=False, overlap=3)
+    # "auto" resolves pre-cache-key: the resolved spec never carries it
+    s = spec_mod.resolve(kind="c2c", n=4096, batch_shape=(),
+                         placement="distributed", layout="zero_copy",
+                         impl="matfft", precision="f32", interpret=False,
+                         batch_tile=None, num_devices=8, axes=("data",),
+                         natural_order=True, fuse_twiddle=False,
+                         overlap="auto")
+    assert s.overlap == "off"
+    # non-distributed placements normalize overlap away entirely
+    s2 = spec_mod.resolve(kind="c2c", n=256, batch_shape=(4,),
+                          placement="local", layout="zero_copy",
+                          impl="matfft", precision="f32", interpret=False,
+                          batch_tile=None, num_devices=None, axes=None,
+                          natural_order=True, fuse_twiddle=False, overlap=7)
+    assert s2.overlap == "off"
+    # DistPlan carries the chunk count
+    assert plan_distributed(4096, 8, chunks=4).chunks == 4
+
+
+def test_overlap_cache_key_and_cost_model(mesh):
+    n = jax.device_count() ** 2 * 64
+    p_off = fft_api.plan(kind="c2c", n=n, mesh=mesh,
+                         placement="distributed", overlap="off")
+    p_on = fft_api.plan(kind="c2c", n=n, mesh=mesh,
+                        placement="distributed", overlap=2)
+    assert p_on is not p_off
+    assert p_on is fft_api.plan(kind="c2c", n=n, mesh=mesh,
+                                placement="distributed", overlap=2)
+    # exposed = total / chunks; "off" exposes everything
+    assert p_off.exposed_collective_bytes == p_off.collective_bytes
+    assert p_off.hidden_collective_bytes == 0
+    assert p_on.exposed_collective_bytes * 2 == p_on.collective_bytes
+    assert (p_on.hidden_collective_bytes
+            == p_on.collective_bytes - p_on.exposed_collective_bytes)
+    # overlap does not change the total payload
+    assert p_on.collective_bytes == p_off.collective_bytes
+
+
+def test_collective_bytes_account_for_transposed_out(mesh):
+    """The DistPlan fix: natural_order=False skips exchange #3, so both
+    the per-device and the plan-level counters report 2 legs, not 3."""
+    from repro.core.fft.distributed import plan_distributed
+    d_nat = plan_distributed(1 << 20, 8, natural_order=True)
+    d_tr = plan_distributed(1 << 20, 8, natural_order=False)
+    assert d_nat.n_exchanges == 3 and d_tr.n_exchanges == 2
+    assert (d_nat.collective_bytes_per_device
+            == 3 * d_nat.bytes_per_exchange_per_device)
+    assert (d_tr.collective_bytes_per_device
+            == 2 * d_tr.bytes_per_exchange_per_device)
+    n = jax.device_count() ** 2 * 64
+    p_nat = fft_api.plan(kind="c2c", n=n, mesh=mesh,
+                         placement="distributed", natural_order=True,
+                         overlap="off")
+    p_tr = fft_api.plan(kind="c2c", n=n, mesh=mesh,
+                        placement="distributed", natural_order=False,
+                        overlap="off")
+    assert p_tr.collective_bytes * 3 == p_nat.collective_bytes * 2
+
+
 def test_distributed_transposed_out_inverse_raises(mesh):
     # the conjugation identity is only the true inverse when the forward
     # returned natural order; TRANSPOSED_OUT plans must fail fast
