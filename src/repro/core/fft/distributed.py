@@ -125,41 +125,140 @@ def plan_distributed(n: int, num_devices: int, *, natural_order: bool = True,
                     natural_order=bool(natural_order), chunks=chunks)
 
 
-def resolve_overlap(n: int, num_devices: int, overlap) -> int | None:
-    """Resolve the ``overlap`` knob to a chunk count (None = monolithic).
+@dataclass(frozen=True)
+class PencilPlan:
+    """Cross-device plan for a 2-D pencil-decomposed transform.
 
-    "off" -> None. "auto" -> OVERLAP_AUTO_CHUNKS when the ring pipeline
-    can plausibly pay for itself (n >= OVERLAP_AUTO_MIN_N, ring size
-    <= OVERLAP_RING_MAX_D, slabs at least 2 wide), else None. An explicit
-    int is validated — chunks must divide both per-device slab widths
-    n1/D and n2/D so every ppermute round moves equal pieces — and is
+    Input (n0, n1) rows shard contiguously over D devices; each device
+    FFTs its local rows (the contiguous axis), then ONE transpose exchange
+    re-pencils the data column-wise — (n0, n1/D) per device — and the
+    column FFT runs locally with a column-major store. The output is the
+    natural-order spectrum, column-sharded: one exchange leg total vs
+    three for the 1-D distributed four-step (arXiv:2202.12756's slab/
+    pencil structure on our existing exchange engines).
+    """
+
+    shape: tuple      # (n0, n1) global image
+    d: int            # devices along the FFT axes
+    chunks: int | None = None  # ppermute pipeline slabs; None = all_to_all
+
+    @property
+    def n(self) -> int:
+        return math.prod(self.shape)
+
+    @property
+    def n_exchanges(self) -> int:
+        return 1
+
+    @property
+    def bytes_per_exchange_per_device(self) -> int:
+        """Planar f32 payload each device moves in THE exchange."""
+        return 2 * 4 * self.n // self.d
+
+    @property
+    def collective_bytes_per_device(self) -> int:
+        return self.n_exchanges * self.bytes_per_exchange_per_device
+
+    @property
+    def exposed_collective_bytes_per_device(self) -> int:
+        """Fill/drain slab per exchange (see DistPlan's twin property)."""
+        return self.collective_bytes_per_device // (self.chunks or 1)
+
+
+def plan_pencil(shape, num_devices: int, *,
+                chunks: int | None = None) -> PencilPlan:
+    shape = tuple(int(d) for d in shape)
+    n0, n1 = shape
+    fft_plan.log2i(num_devices)
+    if n0 % num_devices or n1 % num_devices:
+        raise ValueError(
+            f"pencil decomposition needs D | n0 and D | n1, got "
+            f"shape={shape}, D={num_devices}")
+    return PencilPlan(shape=shape, d=num_devices, chunks=chunks)
+
+
+def _resolve_overlap_knob(n_total: int, num_devices: int, slab_widths,
+                          overlap, widths_desc: str) -> int | None:
+    """Shared ``overlap`` knob parser for both exchange engines.
+
+    "off"/None -> None. "auto" -> OVERLAP_AUTO_CHUNKS when the ring
+    pipeline can plausibly pay for itself (n_total >= OVERLAP_AUTO_MIN_N,
+    ring size <= OVERLAP_RING_MAX_D, slabs at least 2 wide), else None.
+    An explicit int is validated — chunks must divide every per-device
+    slab width so each ppermute round rotates equal pieces — and is
     honoured even where "auto" would decline (user override).
     """
     if overlap is None or overlap == "off":
         return None
-    plan = plan_distributed(n, num_devices)
-    n1l, n2l = plan.n1 // plan.d, plan.n2 // plan.d
+    min_w = min(slab_widths)
     if overlap == "auto":
-        if (n < OVERLAP_AUTO_MIN_N or num_devices > OVERLAP_RING_MAX_D
-                or min(n1l, n2l) < 2):
+        if (n_total < OVERLAP_AUTO_MIN_N
+                or num_devices > OVERLAP_RING_MAX_D or min_w < 2):
             return None
-        return min(OVERLAP_AUTO_CHUNKS, n1l, n2l)
+        return min(OVERLAP_AUTO_CHUNKS, min_w)
     if isinstance(overlap, bool) or not isinstance(overlap, int):
         raise ValueError(
             f"overlap must be 'auto', 'off', or a chunk count (int); "
             f"got {overlap!r}")
-    if overlap < 1 or n1l % overlap or n2l % overlap:
+    if overlap < 1 or any(w % overlap for w in slab_widths):
         raise ValueError(
-            f"overlap={overlap} chunks must divide both per-device slab "
-            f"widths n1/D={n1l} and n2/D={n2l} (n={n}, D={num_devices}) "
-            f"so every ppermute round rotates equal slabs")
+            f"overlap={overlap} chunks must divide {widths_desc} so "
+            f"every ppermute round rotates equal slabs")
     return overlap
+
+
+def resolve_overlap_pencil(shape, num_devices: int, overlap) -> int | None:
+    """Resolve the ``overlap`` knob for the 2-D pencil exchange: chunks
+    must divide the per-device slab width of the ONE exchange (n1/D)."""
+    shape = tuple(int(d) for d in shape)
+    plan = plan_pencil(shape, num_devices)
+    n1l = shape[1] // num_devices
+    return _resolve_overlap_knob(
+        plan.n, num_devices, (n1l,), overlap,
+        f"the per-device exchange slab width n1/D={n1l} "
+        f"(shape={shape}, D={num_devices})")
+
+
+def resolve_overlap(n: int, num_devices: int, overlap) -> int | None:
+    """Resolve the ``overlap`` knob for the 1-D engine: chunks must
+    divide both per-device slab widths n1/D and n2/D."""
+    if overlap is None or overlap == "off":
+        return None
+    plan = plan_distributed(n, num_devices)
+    n1l, n2l = plan.n1 // plan.d, plan.n2 // plan.d
+    return _resolve_overlap_knob(
+        n, num_devices, (n1l, n2l), overlap,
+        f"both per-device slab widths n1/D={n1l} and n2/D={n2l} "
+        f"(n={n}, D={num_devices})")
 
 
 def _axis_size(mesh: Mesh, axis_names) -> int:
     if isinstance(axis_names, str):
         axis_names = (axis_names,)
     return math.prod(mesh.shape[a] for a in axis_names)
+
+
+def _zeros_planar(shape):
+    return (jnp.zeros(shape, jnp.float32), jnp.zeros(shape, jnp.float32))
+
+
+def _ring(d: int, ax, didx, take, place, bufs):
+    """One slab exchange: D-1 direct ppermute rounds + the local piece.
+
+    Round r rotates by r — device ``didx`` sends ``take((didx+r)%D)`` and
+    receives source (didx-r)%D's piece, placed by ``place``. The rounds
+    carry independent data (no chained buffer), so the scheduler can run
+    them concurrently with each other and with the previous slab's FFT.
+    Shared by BOTH overlapped engines (1-D three-exchange and 2-D pencil).
+    """
+    bufs = place(bufs, take(didx), didx)
+    for r in range(1, d):
+        perm = [(s, (s + r) % d) for s in range(d)]
+        pr, pi = take((didx + r) % d)
+        rr = lax.ppermute(pr, ax, perm)
+        ri = lax.ppermute(pi, ax, perm)
+        bufs = place(bufs, (rr, ri), (didx - r) % d)
+    return bufs
 
 
 def _twiddle(i2g: jnp.ndarray, o1: jnp.ndarray, n: int):
@@ -267,26 +366,10 @@ def build_distributed(n: int, mesh: Mesh, axis_names=("data", "model"), *,
         didx = lax.axis_index(ax)
         xr2 = xr_loc.reshape(n1l, n2)
         xi2 = xi_loc.reshape(n1l, n2)
+        zeros = _zeros_planar
 
-        def zeros(shape):
-            return (jnp.zeros(shape, jnp.float32),
-                    jnp.zeros(shape, jnp.float32))
-
-        def ring(take, place, bufs):
-            """One slab exchange: D-1 direct ppermute rounds + the local
-            piece. Round r rotates by r — device d sends `take((d+r)%D)`
-            and receives source (d-r)%D's piece, placed by `place`. The
-            rounds carry independent data (no chained buffer), so the
-            scheduler can run them concurrently with each other and with
-            the previous slab's FFT."""
-            bufs = place(bufs, take(didx), didx)
-            for r in range(1, d):
-                perm = [(s, (s + r) % d) for s in range(d)]
-                pr, pi = take((didx + r) % d)
-                rr = lax.ppermute(pr, ax, perm)
-                ri = lax.ppermute(pi, ax, perm)
-                bufs = place(bufs, (rr, ri), (didx - r) % d)
-            return bufs
+        def ring(take, place, bufs):  # the shared rotation schedule
+            return _ring(d, ax, didx, take, place, bufs)
 
         # ---- xchg #1 slab c: global columns didx*n2l + c-slab ----
         def take1(c):
@@ -366,6 +449,120 @@ def build_distributed(n: int, mesh: Mesh, axis_names=("data", "model"), *,
     # check_vma=False: pallas_call out_shapes do not carry vma metadata.
     return compat.shard_map(local, mesh=mesh, in_specs=(spec, spec),
                             out_specs=(spec, spec), check_vma=False)
+
+
+def build_pencil(shape, mesh: Mesh, axis_names=("data", "model"), *,
+                 impl: str = "matfft", interpret: bool | None = None,
+                 layout: str = "zero_copy", batch_tile: int | None = None,
+                 overlap: int | None = None):
+    """Build the shard_map'd 2-D pencil transform for an (n0, n1) image.
+
+    Data layout (D devices, planar re/im):
+
+      input   (n0, n1) sharded by rows: device d owns rows
+              [d*n0/D, (d+1)*n0/D)
+      pass 1  local FFT of each row (contiguous axis, level 0/1 kernels)
+      xchg    split cols, concat rows -> (n0, n1/D): full columns arrive
+              (the ONE exchange; all_to_all or the chunked ppermute ring)
+      pass 2  local FFT of each column via the shared axis-pass kernel,
+              column-major store -> (n0, n1/D) stays in natural layout
+
+    The output is the full natural-order 2-D spectrum, sharded by COLUMNS
+    (out_specs P(None, ax)) — the standard pencil re-distribution. Both
+    exchange engines are bitwise-identical transforms, same as the 1-D
+    engines (the slab kernels issue exactly the monolithic GEMMs).
+
+    ``overlap`` is the RESOLVED chunk count (`resolve_overlap_pencil`).
+    Returns the shard-mapped function over planar (n0, n1) global arrays;
+    the caller (the planner) wraps it in ONE `jax.jit` and caches it.
+    """
+    if isinstance(axis_names, str):
+        axis_names = (axis_names,)
+    d = _axis_size(mesh, axis_names)
+    plan = plan_pencil(shape, d, chunks=overlap)
+    n0, n1 = plan.shape
+    n0l, n1l = n0 // d, n1 // d
+    ax = tuple(axis_names)
+    if overlap is not None and n1l % overlap:
+        raise ValueError(
+            f"overlap={overlap} does not divide the exchange slab width "
+            f"n1/D={n1l}")
+
+    def pass1(xr_loc, xi_loc):
+        """Rows pass on the local (n0l, n1) shard: the contiguous axis."""
+        return fft_ex.fft(xr_loc, xi_loc, impl=impl, interpret=interpret,
+                          batch_tile=batch_tile, layout=layout)
+
+    def pass2(br, bi, col_offset=0, ncols=None):
+        """Column pass on the assembled (n0, n1l) pencil, col-major store
+        so the result stays in natural (n0, cols) layout."""
+        return fft_ex.fft_cols(br, bi, impl=impl, interpret=interpret,
+                               col_tile=batch_tile, layout=layout,
+                               out_major="col", col_offset=col_offset,
+                               ncols=ncols)
+
+    def local_monolithic(xr_loc, xi_loc):
+        ar, ai = pass1(xr_loc, xi_loc)
+
+        def a2a(a):  # the one exchange: split cols, concat rows
+            return lax.all_to_all(a, ax, split_axis=1, concat_axis=0,
+                                  tiled=True)
+
+        br, bi = a2a(ar), a2a(ai)  # (n0, n1l): full columns on-device
+        return pass2(br, bi)
+
+    def local_overlapped(xr_loc, xi_loc):
+        k = overlap
+        n1c = n1l // k
+        didx = lax.axis_index(ax)
+        ar, ai = pass1(xr_loc, xi_loc)
+        zeros = _zeros_planar
+
+        def ring(take, place, bufs):  # the shared rotation schedule
+            return _ring(d, ax, didx, take, place, bufs)
+
+        # xchg slab c: global columns didx*n1l + c-slab of pass-1 output
+        def take(c):
+            def take_(dest):
+                start = dest * n1l + c * n1c
+                return (lax.dynamic_slice(ar, (0, start), (n0l, n1c)),
+                        lax.dynamic_slice(ai, (0, start), (n0l, n1c)))
+            return take_
+
+        def place(c):
+            def place_(bufs, piece, s):
+                # source s owns global rows [s*n0l, (s+1)*n0l)
+                at = (s * n0l, c * n1c)
+                return (lax.dynamic_update_slice(bufs[0], piece[0], at),
+                        lax.dynamic_update_slice(bufs[1], piece[1], at))
+            return place_
+
+        # Software pipeline (double buffer): slab c+1's ppermute rounds
+        # are issued before slab c's column FFT, so the transfer has a
+        # full kernel's worth of MXU compute to hide behind. Pass-2 slab
+        # c reads the accumulator SNAPSHOT taken before ring c+1 merges
+        # in (slab c's columns are already final there) — reading the
+        # merged value instead would add a ring(c+1) -> fft(c) dataflow
+        # edge and re-expose one slab per exchange. The kernel fetches
+        # only the slab's columns via its col_offset BlockSpec, so every
+        # slab issues exactly the monolithic GEMMs (bitwise-gated).
+        acc = ring(take(0), place(0), zeros((n0, n1l)))
+        out = zeros((n0, n1l))
+        for c in range(k):
+            cur = acc
+            if c + 1 < k:
+                acc = ring(take(c + 1), place(c + 1), acc)
+            cr, ci = pass2(cur[0], cur[1], col_offset=c * n1c, ncols=n1c)
+            out = (lax.dynamic_update_slice(out[0], cr, (0, c * n1c)),
+                   lax.dynamic_update_slice(out[1], ci, (0, c * n1c)))
+        return out
+
+    local = local_monolithic if overlap is None else local_overlapped
+    in_spec = P(ax, None)     # row-sharded input pencils
+    out_spec = P(None, ax)    # column-sharded output pencils
+    # check_vma=False: pallas_call out_shapes do not carry vma metadata.
+    return compat.shard_map(local, mesh=mesh, in_specs=(in_spec, in_spec),
+                            out_specs=(out_spec, out_spec), check_vma=False)
 
 
 def distributed_fft(xr: jnp.ndarray, xi: jnp.ndarray, mesh: Mesh,

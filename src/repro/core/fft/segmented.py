@@ -26,29 +26,45 @@ from repro.fft import executors as fft_ex
 
 
 def build_segmented(mesh: Mesh, batch_axes, *, kind: str = "c2c",
-                    impl: str = "matfft", interpret: bool | None = None,
+                    shape=None, impl: str = "matfft",
+                    interpret: bool | None = None,
                     layout: str = "zero_copy"):
-    """Build the map-only shard_map kernel for a (batch, n) segment batch.
+    """Build the map-only shard_map kernel for a (batch, *shape) segment
+    batch.
 
     Returns ``(inner, in_shardings, out_shardings)``; the caller (the
     planner) wraps ``inner`` in ONE `jax.jit` and caches it. kind="c2c"
     maps planar (xr, xi) -> (yr, yi); kind="r2c" maps real x -> the planar
-    one-sided (batch, n//2 + 1) spectrum, still with zero collectives.
+    one-sided spectrum, still with zero collectives. ``shape`` is the
+    per-segment transform shape (None = 1-D over the last axis); 2-D
+    segments — batches of images — shard exactly like 1-D ones: only the
+    batch axis is split, each device runs the N-D axis passes locally.
     """
     batch_axes = tuple(a for a in batch_axes if a in mesh.shape)
-    spec = P(batch_axes, None)
+    ndim = 1 if shape is None else len(shape)
+    spec = P(batch_axes, *([None] * ndim))
     sharding = NamedSharding(mesh, spec)
 
     if kind == "c2c":
-        def f(xr, xi):
-            return fft_ex.fft(xr, xi, impl=impl, interpret=interpret,
-                              layout=layout)
+        if ndim == 1:
+            def f(xr, xi):
+                return fft_ex.fft(xr, xi, impl=impl, interpret=interpret,
+                                  layout=layout)
+        else:
+            def f(xr, xi):
+                return fft_ex.fftn(xr, xi, shape, impl=impl,
+                                   interpret=interpret, layout=layout)
         in_specs, out_specs = (spec, spec), (spec, spec)
         in_sh, out_sh = (sharding, sharding), (sharding, sharding)
     elif kind == "r2c":
-        def f(x):
-            return fft_ex.rfft(x, impl=impl, interpret=interpret,
-                               layout=layout)
+        if ndim == 1:
+            def f(x):
+                return fft_ex.rfft(x, impl=impl, interpret=interpret,
+                                   layout=layout)
+        else:
+            def f(x):
+                return fft_ex.rfftn(x, shape, impl=impl,
+                                    interpret=interpret, layout=layout)
         in_specs, out_specs = (spec,), (spec, spec)
         in_sh, out_sh = (sharding,), (sharding, sharding)
     else:

@@ -7,6 +7,8 @@ These are the framework-level consumers of the paper's technique:
   * ``fft_conv`` — long causal convolution via FFT (only valid for
     time-INVARIANT kernels; RWKV6/Mamba2 decays are data-dependent, hence
     inapplicable there — DESIGN.md §5);
+  * ``fft_conv2d`` — 2-D FFT convolution for image filtering, the first
+    consumer of the axis-generic ``shape=(n0, n1)`` plans (DESIGN.md §9);
   * ``SpectralMixer`` — FNet-style token mixing, the optional beyond-paper
     integration of the FFT into transformer blocks (ablation in examples/).
 
@@ -91,6 +93,39 @@ def fft_conv(x: jnp.ndarray, kernel: jnp.ndarray, *, impl: str = "matfft",
     pi = xr * ki + xi * kr
     yr = px.execute_inverse(pr, pi)
     return yr[..., :t]
+
+
+def fft_conv2d(x: jnp.ndarray, kernel: jnp.ndarray, *, impl: str = "matfft",
+               interpret: bool | None = None) -> jnp.ndarray:
+    """2-D convolution of (..., h, w) images with a (kh, kw) filter via the
+    2-D FFT plans — the paper's image-filtering workload (arXiv:1505.08019)
+    on the axis-generic transform core, O(hw log hw).
+
+    Both operands are real, so both transforms ride the r2c fast path
+    (packed contiguous axis, deferred N-D untangle): multiply the
+    one-sided 2-D spectra — conjugate symmetry survives the pointwise
+    product — and invert with the r2c plan's inverse. Zero-padded to the
+    next powers of two >= h + kh, w + kw so the circular convolution
+    equals the linear one on the leading h x w window (the "causal"
+    top-left alignment, matching `fft_conv`).
+    """
+    h, w = x.shape[-2:]
+    kh, kw = kernel.shape[-2:]
+    n0, n1 = _next_pow2(h + kh), _next_pow2(w + kw)
+    xp = jnp.pad(x.astype(jnp.float32),
+                 [(0, 0)] * (x.ndim - 2) + [(0, n0 - h), (0, n1 - w)])
+    kp = jnp.pad(kernel.astype(jnp.float32),
+                 [(0, 0)] * (kernel.ndim - 2) + [(0, n0 - kh), (0, n1 - kw)])
+    px = fft_api.plan(kind="r2c", shape=(n0, n1), batch_shape=xp.shape[:-2],
+                      impl=impl, interpret=interpret)
+    pk = fft_api.plan(kind="r2c", shape=(n0, n1), batch_shape=kp.shape[:-2],
+                      impl=impl, interpret=interpret)
+    xr, xi = px.execute_real(xp)
+    kr, ki = pk.execute_real(kp)
+    pr = xr * kr - xi * ki
+    pi = xr * ki + xi * kr
+    yr = px.execute_inverse(pr, pi)
+    return yr[..., :h, :w]
 
 
 def spectral_mixer(x: jnp.ndarray, *, impl: str = "matfft",

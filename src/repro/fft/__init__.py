@@ -11,10 +11,17 @@ size, reused across every map task):
     p.hbm_bytes, p.gemm_macs, p.flops # analytic roofline cost model
     p.fused_untangle                  # resolved strategy, inspectable
 
+Transforms are N-D: ``plan(kind="c2c", shape=(n0, n1))`` plans a true 2-D
+image FFT over the trailing axes (scalar ``n`` stays as 1-D sugar), built
+from the same shared axis-pass engine as the 1-D four-step — transpose-
+free in HBM. `fft2`/`ifft2`/`rfft2`/`irfft2` are the numpy-convention
+wrappers.
+
 Placements scale the same call from one core to the full mesh:
 "local" (level-0/1 kernels), "segmented" (the paper's map-only regime,
-zero collectives), "distributed" (cross-device four-step over all_to_all);
-"auto" picks from n, batch_shape, and mesh size.
+zero collectives), "distributed" (1-D cross-device four-step over three
+exchanges; 2-D pencil decomposition over ONE exchange); "auto" picks from
+shape, batch_shape, and mesh size.
 
 The deprecated per-call entry points (`repro.kernels.fft.ops.fft` etc.)
 are thin shims over this facade. Smoke-check with
@@ -22,7 +29,7 @@ are thin shims over this facade. Smoke-check with
 """
 
 from repro.fft.planner import (ExecutablePlan, cache_info, clear_plan_cache,
-                               plan)
+                               fft2, ifft2, irfft2, plan, rfft2)
 from repro.fft.spec import MAX_LOCAL_N, FftSpec, resolve_placement
 
 __all__ = [
@@ -31,6 +38,10 @@ __all__ = [
     "MAX_LOCAL_N",
     "cache_info",
     "clear_plan_cache",
+    "fft2",
+    "ifft2",
+    "irfft2",
     "plan",
     "resolve_placement",
+    "rfft2",
 ]

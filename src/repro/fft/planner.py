@@ -29,6 +29,7 @@ import math
 import threading
 
 import jax
+import jax.numpy as jnp
 
 from repro.fft import executors
 from repro.fft import spec as spec_mod
@@ -62,23 +63,36 @@ class ExecutablePlan:
         self.mesh = mesh
         # RLock: _build_inverse runs under it and re-enters via _forward()
         self._build_lock = threading.RLock()
-        # r2c fast path packs n reals as n/2 complex (DESIGN.md §4)
+        # r2c fast path packs n reals as n/2 complex on the contiguous
+        # axis (DESIGN.md §4; deferred N-D untangle for ndim > 1)
         self._fast_r2c = (spec.kind == "r2c" and spec.impl == "matfft"
-                          and spec.n >= 4)
+                          and spec.shape[-1] >= 4
+                          and spec.placement != "distributed")
         #: cross-device plan (distributed placement only)
         self.dist = None
         if spec.placement == "distributed":
-            from repro.core.fft.distributed import plan_distributed
             num_devices = math.prod(mesh.shape[a] for a in spec.axes)
-            self.dist = plan_distributed(
-                spec.n, num_devices, natural_order=spec.natural_order,
-                chunks=None if spec.overlap == "off" else spec.overlap)
-            # the local factorization covers the longest per-device pass —
-            # global n can exceed MAX_LEAF**2 (up to 2^32), each pass can't
-            local_n = max(self.dist.n1, self.dist.n2)
-        else:
+            chunks = None if spec.overlap == "off" else spec.overlap
+            if spec.ndim == 1:
+                from repro.core.fft.distributed import plan_distributed
+                self.dist = plan_distributed(
+                    spec.n, num_devices, natural_order=spec.natural_order,
+                    chunks=chunks)
+                # the local factorization covers the longest per-device
+                # pass — global n can exceed MAX_LEAF**2, each pass can't
+                local_n = max(self.dist.n1, self.dist.n2)
+            else:
+                from repro.core.fft.distributed import plan_pencil
+                self.dist = plan_pencil(spec.shape, num_devices,
+                                        chunks=chunks)
+                local_n = max(spec.shape)
+        elif spec.ndim == 1:
             local_n = spec.n // 2 if self._fast_r2c else spec.n
-        #: level-0/1 factorization of the per-device transform
+        else:
+            # contiguous axis dominates; halved by the r2c packing
+            last = spec.shape[-1] // 2 if self._fast_r2c else spec.shape[-1]
+            local_n = max(last, *spec.shape[:-1])
+        #: level-0/1 factorization of the longest per-device axis pass
         self.leaf = kplan.make_plan(max(local_n, 1))
         self._traces = {"forward": 0, "inverse": 0}
         self._fwd = None  # (inner, jitted), built lazily
@@ -95,7 +109,7 @@ class ExecutablePlan:
 
     def __repr__(self):
         s = self.spec
-        return (f"ExecutablePlan(kind={s.kind!r}, n={s.n}, "
+        return (f"ExecutablePlan(kind={s.kind!r}, shape={s.shape}, "
                 f"batch_shape={s.batch_shape}, placement={s.placement!r}, "
                 f"layout={s.layout!r}, impl={s.impl!r}, "
                 f"levels={self.leaf.levels}, "
@@ -110,7 +124,16 @@ class ExecutablePlan:
 
     @property
     def n(self) -> int:
+        """Total transform points (the length, for 1-D specs)."""
         return self.spec.n
+
+    @property
+    def shape(self) -> tuple:
+        return self.spec.shape
+
+    @property
+    def ndim(self) -> int:
+        return self.spec.ndim
 
     @property
     def batch_shape(self) -> tuple:
@@ -130,25 +153,40 @@ class ExecutablePlan:
 
         False in the known n > 2*MAX_LEAF regime where the half-length
         transform is level-1 and the untangle runs as a host epilogue
-        (byte-neutral there, still flop-halved — DESIGN.md §4), and for
-        all c2c plans.
+        (byte-neutral there, still flop-halved — DESIGN.md §4), for all
+        c2c plans, and for N-D plans (the N-D untangle is deferred past
+        the leading-axis passes and runs vectorized on the host).
         """
-        return self._fast_r2c and self.leaf.levels == 1
+        return (self._fast_r2c and self.spec.ndim == 1
+                and self.leaf.levels == 1)
 
     # ------------------------------------------------------------------
-    # analytic cost model (roofline numerators; DESIGN.md §3-4)
+    # analytic cost model (roofline numerators; DESIGN.md §3-4, §9)
 
     @property
     def flops_per_row(self) -> float:
-        """Algorithmic complex-FLOPs per batch row (5 n log2 n convention)."""
-        n = self.spec.n
+        """Algorithmic complex-FLOPs per batch row (5 n log2 n convention).
+
+        N-D is a sum over axis passes; the r2c fast path halves the
+        working width after the contiguous-axis pass and adds the O(N/2)
+        untangle (~10 real ops per bin).
+        """
+        s = self.spec
+        n = s.n
         if n <= 1:
             return 0.0
-        if self._fast_r2c:
-            m = n // 2
-            # half-length transform + O(m) untangle (~10 real ops per bin)
+        if not self._fast_r2c:
+            return 5.0 * n * math.log2(n)
+        m = s.shape[-1] // 2
+        if s.ndim == 1:
             return 5.0 * m * math.log2(m) + 10.0 * m if m > 1 else 10.0 * m
-        return 5.0 * n * math.log2(n)
+        half_n = n // 2
+        f = 10.0 * half_n  # untangle
+        if m > 1:
+            f += (half_n // m) * 5.0 * m * math.log2(m)
+        for ax_len in s.shape[:-1]:
+            f += (half_n // ax_len) * 5.0 * ax_len * math.log2(ax_len)
+        return f
 
     @property
     def flops(self) -> float:
@@ -157,7 +195,18 @@ class ExecutablePlan:
     @property
     def gemm_macs_per_row(self) -> float:
         """Real MACs the matmul formulation issues per batch row."""
-        if self.spec.placement == "distributed":
+        s = self.spec
+        if s.ndim > 1:
+            # per-axis passes; identical for local / segmented / pencil
+            # placements (the pencil runs exactly the local GEMMs)
+            width = s.n // 2 if self._fast_r2c else s.n
+            last = s.shape[-1] // 2 if self._fast_r2c else s.shape[-1]
+            macs = ((width // max(last, 1))
+                    * kplan.make_plan(max(last, 1)).gemm_macs)
+            for ax_len in s.shape[:-1]:
+                macs += (width // ax_len) * kplan.make_plan(ax_len).gemm_macs
+            return macs
+        if s.placement == "distributed":
             d = self.dist
             # pass 1: n2 length-n1 transforms; pass 2: n1 length-n2
             return (d.n2 * kplan.make_plan(d.n1).gemm_macs
@@ -174,15 +223,32 @@ class ExecutablePlan:
         s = self.spec
         if s.placement == "distributed":
             plane = _F32 * s.n
-            # two local passes, each read 2 planes + write 2 planes, plus
-            # the a2a buffers landing in HBM (one round-trip per a2a) and,
-            # unfused, the elementwise twiddle's extra round-trip
             per_pass = 2 * 2 * plane
+            if s.ndim > 1:
+                # pencil: two local passes + the ONE exchange's buffers
+                # landing in HBM (one round-trip); the r2c slice path adds
+                # the one-sided write
+                bytes_ = 2 * per_pass + 1 * per_pass
+                if s.kind == "r2c":
+                    m1 = s.shape[-1] // 2 + 1
+                    bytes_ += 2 * _F32 * (s.n // s.shape[-1]) * m1
+                return bytes_
+            # 1-D: two local passes, each read 2 planes + write 2 planes,
+            # plus the a2a buffers landing in HBM (one round-trip per a2a)
+            # and, unfused, the elementwise twiddle's extra round-trip
             n_a2a = 3 if s.natural_order else 2
             bytes_ = 2 * per_pass + n_a2a * per_pass
             if not s.fuse_twiddle:
                 bytes_ += per_pass
             return bytes_
+        if s.ndim > 1:
+            if s.kind == "r2c" and self._fast_r2c:
+                return kplan.rfftn_hbm_bytes(s.shape)
+            if s.kind == "r2c":
+                m1 = s.shape[-1] // 2 + 1
+                return (kplan.fftn_hbm_bytes(s.shape, s.layout)
+                        + 2 * _F32 * (s.n // s.shape[-1]) * m1)
+            return kplan.fftn_hbm_bytes(s.shape, s.layout)
         if s.kind == "r2c" and self._fast_r2c:
             return kplan.rfft_hbm_bytes(s.n)
         if s.kind == "r2c":
@@ -249,28 +315,58 @@ class ExecutablePlan:
         s = self.spec
         in_shardings = out_shardings = None
         if s.placement == "local":
-            if s.kind == "c2c":
+            if s.kind == "c2c" and s.ndim == 1:
                 def inner(xr, xi):
                     return executors.fft(
                         xr, xi, impl=s.impl, interpret=s.interpret,
                         batch_tile=s.batch_tile, layout=s.layout)
-            else:
+            elif s.kind == "c2c":
+                def inner(xr, xi):
+                    return executors.fftn(
+                        xr, xi, s.shape, impl=s.impl, interpret=s.interpret,
+                        batch_tile=s.batch_tile, layout=s.layout)
+            elif s.ndim == 1:
                 def inner(x):
                     return executors.rfft(
                         x, impl=s.impl, interpret=s.interpret,
                         batch_tile=s.batch_tile, layout=s.layout)
+            else:
+                def inner(x):
+                    return executors.rfftn(
+                        x, s.shape, impl=s.impl, interpret=s.interpret,
+                        batch_tile=s.batch_tile, layout=s.layout)
         elif s.placement == "segmented":
             from repro.core.fft import segmented
             inner, in_shardings, out_shardings = segmented.build_segmented(
-                self.mesh, s.axes, kind=s.kind, impl=s.impl,
+                self.mesh, s.axes, kind=s.kind, shape=s.shape, impl=s.impl,
                 interpret=s.interpret, layout=s.layout)
-        else:
+        elif s.ndim == 1:
             from repro.core.fft import distributed
             inner = distributed.build_distributed(
                 s.n, self.mesh, s.axes, impl=s.impl,
                 natural_order=s.natural_order, fuse_twiddle=s.fuse_twiddle,
                 interpret=s.interpret, layout=s.layout,
                 overlap=None if s.overlap == "off" else s.overlap)
+        else:
+            from repro.core.fft import distributed
+            pencil = distributed.build_pencil(
+                s.shape, self.mesh, s.axes, impl=s.impl,
+                interpret=s.interpret, layout=s.layout,
+                batch_tile=s.batch_tile,
+                overlap=None if s.overlap == "off" else s.overlap)
+            if s.kind == "c2c":
+                inner = pencil
+            else:
+                m1 = s.shape[-1] // 2 + 1
+
+                def inner(x):
+                    # r2c pencil rides the c2c engine: the packed-real
+                    # halving doesn't compose with the exchange's column
+                    # split, so transform the real input as c2c and slice
+                    # the one-sided spectrum (global slice, outside the
+                    # shard_map — still exactly one exchange leg)
+                    yr, yi = pencil(x, jnp.zeros_like(x))
+                    return yr[..., :m1], yi[..., :m1]
 
         def counted(*args):
             # python side effect: runs once per trace OF THIS PLAN'S JIT,
@@ -329,7 +425,8 @@ class ExecutablePlan:
         s = self.spec
         fwd_inner = self._forward()[0]
         if s.kind == "c2c":
-            if s.placement == "distributed" and not s.natural_order:
+            if (s.placement == "distributed" and s.ndim == 1
+                    and not s.natural_order):
                 raise NotImplementedError(
                     "execute_inverse needs natural_order=True: the "
                     "transposed-out forward returns o1-major block order, "
@@ -337,11 +434,12 @@ class ExecutablePlan:
                     "spectrum. Plan the inverse leg with "
                     "natural_order=True (TRANSPOSED_OUT consumers apply "
                     "their pointwise op, then run a separate inverse plan)")
-            n = s.n
+            n = s.n  # total points: the N-D conjugation identity's scale
 
             def inner(yr, yi):
                 # conjugation identity; the forward must return natural
-                # order for this to be the true inverse (checked above)
+                # order for this to be the true inverse (checked above —
+                # the 2-D pencil is always natural-order, just re-sharded)
                 ar, ai = fwd_inner(yr, -yi)
                 return ar / n, -ai / n
         else:
@@ -349,11 +447,16 @@ class ExecutablePlan:
                 raise NotImplementedError(
                     f"execute_inverse for r2c plans is local-only, "
                     f"got placement={s.placement!r}")
-
-            def inner(yr, yi):
-                return executors.irfft(
-                    yr, yi, impl=s.impl, interpret=s.interpret,
-                    batch_tile=s.batch_tile, layout=s.layout)
+            if s.ndim == 1:
+                def inner(yr, yi):
+                    return executors.irfft(
+                        yr, yi, impl=s.impl, interpret=s.interpret,
+                        batch_tile=s.batch_tile, layout=s.layout)
+            else:
+                def inner(yr, yi):
+                    return executors.irfftn(
+                        yr, yi, s.shape, impl=s.impl, interpret=s.interpret,
+                        batch_tile=s.batch_tile, layout=s.layout)
 
         def counted(yr, yi):
             self._traces["inverse"] += 1
@@ -367,16 +470,17 @@ class ExecutablePlan:
         if tuple(got) != expected:
             raise ValueError(
                 f"{what}: plan was built for shape {expected} "
-                f"(batch_shape={self.spec.batch_shape}, n={self.spec.n}), "
-                f"got {tuple(got)}")
+                f"(batch_shape={self.spec.batch_shape}, "
+                f"shape={self.spec.shape}), got {tuple(got)}")
 
     def execute(self, xr, xi):
-        """Forward c2c transform of planar (*batch_shape, n) float32 arrays."""
+        """Forward c2c transform of planar (*batch_shape, *shape) float32
+        arrays."""
         if self.spec.kind != "c2c":
             raise ValueError(
                 "execute() is for kind='c2c' plans; use execute_real(x) "
                 "on this r2c plan")
-        shape = (*self.spec.batch_shape, self.spec.n)
+        shape = self.spec.operand_shape
         self._check_shape(xr.shape, shape, "execute")
         self._check_shape(xi.shape, shape, "execute")
         raw, jitted = self._forward()
@@ -385,14 +489,13 @@ class ExecutablePlan:
         return jitted(xr, xi)
 
     def execute_real(self, x):
-        """Forward r2c transform: real (*batch_shape, n) -> planar one-sided
-        (*batch_shape, n//2 + 1) spectrum."""
+        """Forward r2c transform: real (*batch_shape, *shape) -> planar
+        one-sided (*batch_shape, *shape[:-1], shape[-1]//2 + 1) spectrum."""
         if self.spec.kind != "r2c":
             raise ValueError(
                 "execute_real() is for kind='r2c' plans; use "
                 "execute(xr, xi) on this c2c plan")
-        self._check_shape(x.shape, (*self.spec.batch_shape, self.spec.n),
-                          "execute_real")
+        self._check_shape(x.shape, self.spec.operand_shape, "execute_real")
         raw, jitted = self._forward()
         if _is_tracer(x):
             return raw(x)
@@ -420,7 +523,7 @@ class ExecutablePlan:
             raise ValueError(
                 f"execute_async on a {self.spec.kind!r} plan takes "
                 f"{nargs} operand(s), got {len(operands)}")
-        shape = (*self.spec.batch_shape, self.spec.n)
+        shape = self.spec.operand_shape
         for op in operands:
             self._check_shape(op.shape, shape, "execute_async")
         if _is_tracer(*operands):
@@ -435,13 +538,15 @@ class ExecutablePlan:
     def execute_inverse(self, yr, yi):
         """Inverse transform.
 
-        c2c: planar spectrum -> planar signal (both (*batch_shape, n)).
-        r2c: one-sided (*batch_shape, n//2 + 1) spectrum -> real signal.
+        c2c: planar spectrum -> planar signal (both (*batch_shape, *shape)).
+        r2c: one-sided (*batch_shape, *shape[:-1], shape[-1]//2 + 1)
+        spectrum -> real (*batch_shape, *shape) signal.
         """
-        if self.spec.kind == "c2c":
-            shape = (*self.spec.batch_shape, self.spec.n)
+        s = self.spec
+        if s.kind == "c2c":
+            shape = s.operand_shape
         else:
-            shape = (*self.spec.batch_shape, self.spec.n // 2 + 1)
+            shape = (*s.batch_shape, *s.shape[:-1], s.shape[-1] // 2 + 1)
         self._check_shape(yr.shape, shape, "execute_inverse")
         self._check_shape(yi.shape, shape, "execute_inverse")
         raw, jitted = self._inverse()
@@ -454,38 +559,51 @@ class ExecutablePlan:
 # the facade
 
 
-def plan(kind: str = "c2c", *, n: int, batch_shape=(), mesh=None,
+def plan(kind: str = "c2c", *, n: int | None = None, shape=None,
+         batch_shape=(), mesh=None,
          placement: str = "auto", layout: str = "zero_copy",
          impl: str = "matfft", precision: str = "f32",
          interpret: bool | None = None, batch_tile: int | None = None,
          axes=None, natural_order: bool = True,
-         fuse_twiddle: bool = False, overlap="auto") -> ExecutablePlan:
+         fuse_twiddle: bool = False, overlap="auto",
+         r2c_axis: int = -1) -> ExecutablePlan:
     """Resolve a transform spec and return the cached `ExecutablePlan`.
 
     Args:
       kind: "c2c" (planar complex) or "r2c" (real input, one-sided output).
-      n: transform length (power of two; the real length for r2c).
+      n: 1-D transform length — sugar for ``shape=(n,)``; pass exactly one
+        of ``n``/``shape`` (power-of-two axes; real length for r2c).
+      shape: N-D transform shape over the TRAILING operand axes, e.g.
+        ``shape=(n0, n1)`` for a 2-D image FFT. The contiguous (last) axis
+        runs the level-0/1 four-step (up to MAX_LEAF**2); earlier axes run
+        as single column-kernel passes (up to MAX_LEAF each). Scalar-n and
+        the equivalent 1-tuple resolve to the SAME cache key.
       batch_shape: leading batch dims of the operands; () for a single
-        signal (required for placement="distributed").
+        signal/image (required for placement="distributed").
       mesh: jax Mesh for segmented/distributed placements.
-      placement: "auto" (heuristic over n/batch/mesh), "local",
+      placement: "auto" (heuristic over shape/batch/mesh), "local",
         "segmented" (map-only batch sharding, zero collectives), or
-        "distributed" (cross-device four-step over all_to_all).
-      layout: "zero_copy" (default) or "copy" (measured legacy baseline).
+        "distributed" (1-D: cross-device four-step, 3 exchanges; 2-D:
+        pencil decomposition, ONE exchange — DESIGN.md §9).
+      layout: "zero_copy" (default) or "copy" (measured legacy baseline;
+        for N-D the naive transpose-per-axis path bench_fft2.py gates on).
       impl: leaf kernel ("matfft" MXU GEMM, "stockham" VPU, "ref" jnp).
       precision: "f32" (reserved for future variants).
       interpret: Pallas interpret-mode override; None = auto off-TPU.
       batch_tile: kernel batch/column tile override.
       axes: mesh axes to use; None = every axis of the mesh.
-      natural_order / fuse_twiddle: distributed-placement options
-        (DESIGN.md §2; ignored elsewhere).
+      natural_order / fuse_twiddle: 1-D distributed-placement options
+        (DESIGN.md §2; ignored elsewhere — the pencil is always natural).
       overlap: distributed-placement exchange engine (DESIGN.md §8):
         "off" = monolithic all_to_alls; an int = that many ppermute
         pipeline slabs per exchange, hidden behind the local FFTs (must
-        divide n1/D and n2/D — validated at plan time); "auto" picks a
-        chunk count or "off" from n and the ring size. Resolved before
-        the cache key, so overlap="auto" and the equivalent explicit
-        value share one plan.
+        divide the per-device slab widths — validated at plan time);
+        "auto" picks a chunk count or "off" from the size and ring.
+        Resolved before the cache key, so overlap="auto" and the
+        equivalent explicit value share one plan.
+      r2c_axis: which transform axis carries the real-to-complex halving;
+        only the contiguous axis (-1) is supported — anything else is a
+        plan-time ValueError (the packed-real reshape is only free there).
 
     Same resolved spec (and mesh) -> the SAME plan object, with its jit'd
     executables and twiddle tables already built.
@@ -512,11 +630,11 @@ def plan(kind: str = "c2c", *, n: int, batch_shape=(), mesh=None,
         raise ValueError("axes= requires mesh=")
 
     resolved = spec_mod.resolve(
-        kind=kind, n=n, batch_shape=batch_shape, placement=placement,
-        layout=layout, impl=impl, precision=precision, interpret=interpret,
-        batch_tile=batch_tile, num_devices=num_devices, axes=axes,
-        natural_order=natural_order, fuse_twiddle=fuse_twiddle,
-        overlap=overlap)
+        kind=kind, n=n, shape=shape, batch_shape=batch_shape,
+        placement=placement, layout=layout, impl=impl, precision=precision,
+        interpret=interpret, batch_tile=batch_tile,
+        num_devices=num_devices, axes=axes, natural_order=natural_order,
+        fuse_twiddle=fuse_twiddle, overlap=overlap, r2c_axis=r2c_axis)
 
     # local plans don't touch the mesh -> key them mesh-free so the same
     # spec planned with and without a mesh unifies
@@ -531,6 +649,64 @@ def plan(kind: str = "c2c", *, n: int, batch_shape=(), mesh=None,
         p = ExecutablePlan(resolved, mesh_for_key)
         _PLAN_CACHE[key] = p
         return p
+
+
+# ---------------------------------------------------------------------------
+# 2-D convenience wrappers (numpy.fft.fft2/rfft2 conventions): plan over the
+# trailing two axes, execute through the cached plan
+
+
+def _check_2d(a, what: str) -> None:
+    # numpy.fft.fft2/rfft2 raise for <2-D input; silently planning a 1-D
+    # transform here would hand back a wrong-dimensionality spectrum
+    if a.ndim < 2:
+        raise ValueError(
+            f"{what} transforms the trailing TWO axes; got a "
+            f"{a.ndim}-D operand of shape {tuple(a.shape)} — use the 1-D "
+            f"plan (n=...) for single-axis transforms")
+
+
+def fft2(xr, xi, **kw):
+    """Forward 2-D FFT over the trailing two axes of planar float32 arrays.
+
+    ``kw`` passes through to `plan` (mesh=, placement=, overlap=, ...);
+    repeat calls with the same shapes hit the plan cache.
+    """
+    _check_2d(xr, "fft2")
+    p = plan(kind="c2c", shape=tuple(xr.shape[-2:]),
+             batch_shape=tuple(xr.shape[:-2]), **kw)
+    return p.execute(xr, xi)
+
+
+def ifft2(yr, yi, **kw):
+    """Inverse 2-D FFT over the trailing two axes (planar)."""
+    _check_2d(yr, "ifft2")
+    p = plan(kind="c2c", shape=tuple(yr.shape[-2:]),
+             batch_shape=tuple(yr.shape[:-2]), **kw)
+    return p.execute_inverse(yr, yi)
+
+
+def rfft2(x, **kw):
+    """Real-input 2-D FFT: (*batch, n0, n1) real -> planar one-sided
+    (*batch, n0, n1//2 + 1) spectrum (numpy.fft.rfft2 convention)."""
+    _check_2d(x, "rfft2")
+    p = plan(kind="r2c", shape=tuple(x.shape[-2:]),
+             batch_shape=tuple(x.shape[:-2]), **kw)
+    return p.execute_real(x)
+
+
+def irfft2(yr, yi, shape=None, **kw):
+    """Inverse of rfft2: one-sided spectrum -> real (*batch, n0, n1).
+
+    ``shape`` is the real-image shape (n0, n1); default reconstructs the
+    even length 2*(yr.shape[-1] - 1) like numpy.fft.irfft2.
+    """
+    _check_2d(yr, "irfft2")
+    if shape is None:
+        shape = (yr.shape[-2], 2 * (yr.shape[-1] - 1))
+    p = plan(kind="r2c", shape=tuple(shape),
+             batch_shape=tuple(yr.shape[:-2]), **kw)
+    return p.execute_inverse(yr, yi)
 
 
 def cache_info() -> dict:

@@ -8,8 +8,11 @@ leaf (level 0), four-step (level 1), segmented and distributed over an
 oracle, and verifies the plan cache never retraces. The distributed case
 runs BOTH exchange engines (overlap="off" monolithic all_to_alls and an
 overlapped ppermute pipeline) and asserts their outputs are bitwise
-identical. Exit code 0 = all pass. Wired into test.sh and the CI workflow
-as the facade's cheap end-to-end gate.
+identical. The 2-D cases cover local fft2/rfft2 against numpy and the
+distributed pencil placement (one exchange leg) in both overlap modes,
+with a bitwise cross-check between the local and distributed results
+(matched kernel tiles -> identical GEMMs). Exit code 0 = all pass. Wired
+into test.sh and the CI workflow as the facade's cheap end-to-end gate.
 """
 
 import os
@@ -102,6 +105,57 @@ def main() -> int:
           f"(exposed {p_on.exposed_collective_bytes} of "
           f"{p_on.collective_bytes} collective bytes)")
     ok &= bitwise
+
+    # ---- 2-D: local c2c + r2c against numpy ----
+    n0, n1 = 64, 64
+    ir = rng.standard_normal((n0, n1)).astype(np.float32)
+    ii = rng.standard_normal((n0, n1)).astype(np.float32)
+    want2 = np.fft.fft2(ir + 1j * ii)
+    # batch_tile = n1/D matches the distributed shard's kernel tiles, so
+    # the local and pencil results below are bitwise-comparable
+    bt = n1 // jax.device_count()
+    p2 = fft_api.plan(kind="c2c", shape=(n0, n1), interpret=True,
+                      batch_tile=bt)
+    lr, li = p2.execute(jnp.asarray(ir), jnp.asarray(ii))
+    p2.execute(jnp.asarray(ir), jnp.asarray(ii))
+    ok &= _check("c2c/fft2_local", _rel_err(lr, li, want2), p2)
+
+    p2r = fft_api.plan(kind="r2c", shape=(n0, n1), interpret=True)
+    sr2, si2 = p2r.execute_real(jnp.asarray(ir))
+    p2r.execute_real(jnp.asarray(ir))
+    ok &= _check("r2c/rfft2_local", _rel_err(sr2, si2, np.fft.rfft2(ir)),
+                 p2r)
+
+    # ---- 2-D: distributed pencil (ONE exchange leg), both engines ----
+    p2_off = fft_api.plan(kind="c2c", shape=(n0, n1), mesh=mesh,
+                          placement="distributed", overlap="off",
+                          interpret=True, batch_tile=bt)
+    dr, di = p2_off.execute(jnp.asarray(ir), jnp.asarray(ii))
+    p2_off.execute(jnp.asarray(ir), jnp.asarray(ii))
+    ok &= _check("c2c/pencil_off", _rel_err(dr, di, want2), p2_off)
+    one_leg = p2_off.dist.n_exchanges == 1
+    print(f"selftest pencil exchange legs         "
+          f"{'OK' if one_leg else 'FAIL'} "
+          f"({p2_off.dist.n_exchanges} leg, "
+          f"{p2_off.collective_bytes} collective bytes)")
+    ok &= one_leg
+
+    p2_on = fft_api.plan(kind="c2c", shape=(n0, n1), mesh=mesh,
+                         placement="distributed", overlap=4,
+                         interpret=True, batch_tile=bt)
+    er2, ei2 = p2_on.execute(jnp.asarray(ir), jnp.asarray(ii))
+    p2_on.execute(jnp.asarray(ir), jnp.asarray(ii))
+    ok &= _check("c2c/pencil_overlap4", _rel_err(er2, ei2, want2), p2_on)
+    bitwise2 = bool((np.asarray(er2) == np.asarray(dr)).all()
+                    and (np.asarray(ei2) == np.asarray(di)).all())
+    print(f"selftest pencil overlap==off bitwise   "
+          f"{'OK' if bitwise2 else 'FAIL'}")
+    ok &= bitwise2
+    bitwise_ld = bool((np.asarray(dr) == np.asarray(lr)).all()
+                      and (np.asarray(di) == np.asarray(li)).all())
+    print(f"selftest pencil==local bitwise         "
+          f"{'OK' if bitwise_ld else 'FAIL'} (matched tiles)")
+    ok &= bitwise_ld
 
     info = fft_api.cache_info()
     print(f"selftest plan cache: {info['misses']} built, "

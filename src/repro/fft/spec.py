@@ -3,16 +3,27 @@
 The pipeline is: user kwargs -> `resolve()` -> a frozen, hashable
 `FftSpec`. Resolution does ALL the up-front validation the paper's
 `cufftPlanMany` analogue needs — kind/layout/impl membership, power-of-two
-lengths, the placement heuristic, and the distributed `D | n1` constraint —
-so strategy errors surface as one clear `ValueError` at plan time instead
-of a deep shard_map/pallas failure at execute time.
+axis lengths, the placement heuristic, and the distributed divisibility
+constraints — so strategy errors surface as one clear `ValueError` at plan
+time instead of a deep shard_map/pallas failure at execute time.
+
+Transforms are N-D: `shape` is the tuple of transform-axis lengths over
+the TRAILING axes of the operand (scalar ``n`` is kept as 1-D sugar and
+normalizes to ``shape=(n,)`` — same cache key). The contiguous (last) axis
+can run the level-0/1 four-step up to MAX_LEAF**2; every earlier axis runs
+as ONE column-strided kernel pass, so it caps at MAX_LEAF. r2c rides the
+packed-real fast path on the contiguous axis only (`r2c_axis` must
+normalize to -1).
 
 Placement resolution (`placement="auto"`):
 
-  no mesh                      -> "local"   (error if n > MAX_LEAF**2)
+  no mesh                      -> "local"   (error if the shape can't fit)
   mesh + 1-D batch of >1 rows  -> "segmented"   (the paper's map-only regime)
-  mesh + single signal, D > 1,
+  mesh + single 1-D signal, D > 1,
       n >= D^2                 -> "distributed" (cross-device four-step)
+  mesh + single 2-D image, D > 1,
+      D | n0 and D | n1        -> "distributed" (pencil decomposition:
+                                  shard rows, ONE transpose exchange)
   mesh + anything that still
       fits one device          -> "local"
   otherwise                    -> ValueError
@@ -45,7 +56,8 @@ class FftSpec:
     """Fully-resolved transform spec; hashable plan-cache key (sans mesh)."""
 
     kind: str                     # "c2c" | "r2c"
-    n: int                        # transform length (real length for r2c)
+    shape: tuple                  # transform-axis lengths (trailing axes;
+    #                               real length on the last axis for r2c)
     batch_shape: tuple            # leading batch dims; () for distributed
     placement: str                # resolved: "local"|"segmented"|"distributed"
     layout: str                   # "zero_copy" | "copy"
@@ -54,8 +66,8 @@ class FftSpec:
     interpret: bool | None        # planner resolves None -> bool pre-cache
     batch_tile: int | None        # kernel batch/col tile override
     axes: tuple | None            # mesh axes (segmented batch / distributed)
-    natural_order: bool           # distributed only: all_to_all #3 or not
-    fuse_twiddle: bool            # distributed only: twiddle in leaf epilogue
+    natural_order: bool           # 1-D distributed only: all_to_all #3 or not
+    fuse_twiddle: bool            # 1-D distributed only: twiddle in leaf
     overlap: object = "off"       # distributed only: "off" | int chunks
     #                               ("auto" is resolved here, pre-cache-key)
 
@@ -63,42 +75,71 @@ class FftSpec:
     def rows(self) -> int:
         return math.prod(self.batch_shape)
 
+    @property
+    def ndim(self) -> int:
+        """Number of transform axes."""
+        return len(self.shape)
 
-def resolve_placement(n: int, rows: int, batch_ndim: int,
+    @property
+    def n(self) -> int:
+        """Total transform points (== the length for 1-D specs)."""
+        return math.prod(self.shape)
+
+    @property
+    def operand_shape(self) -> tuple:
+        return (*self.batch_shape, *self.shape)
+
+
+def _fits_local(shape: tuple) -> bool:
+    """Can one device run this shape? The contiguous axis gets the nested
+    four-step (MAX_LEAF**2); each earlier axis is a single column-kernel
+    pass (MAX_LEAF)."""
+    return (shape[-1] <= MAX_LOCAL_N
+            and all(d <= kplan.MAX_LEAF for d in shape[:-1]))
+
+
+def resolve_placement(shape, rows: int, batch_ndim: int,
                       num_devices: int | None) -> str:
     """The `placement="auto"` heuristic (pure; unit-tested directly).
 
     Args:
-      n: transform length.
+      shape: transform shape tuple (an int is 1-D sugar).
       rows: total batch rows (prod of batch_shape).
       batch_ndim: len(batch_shape).
       num_devices: mesh size over the candidate axes, or None if no mesh.
     """
+    shape = (int(shape),) if isinstance(shape, int) else tuple(shape)
+    fits = _fits_local(shape)
     if num_devices is None:
-        if n > MAX_LOCAL_N:
+        if not fits:
             raise ValueError(
-                f"n={n} exceeds the single-device maximum MAX_LEAF**2="
-                f"{MAX_LOCAL_N}; pass mesh= so the planner can pick "
-                f"placement='distributed'")
+                f"shape={shape} exceeds the single-device maximum "
+                f"(contiguous axis <= MAX_LEAF**2={MAX_LOCAL_N}, earlier "
+                f"axes <= MAX_LEAF={kplan.MAX_LEAF}); pass mesh= so the "
+                f"planner can pick placement='distributed'")
         return "local"
-    if (rows > 1 and batch_ndim == 1 and n <= MAX_LOCAL_N
+    if (rows > 1 and batch_ndim == 1 and fits
             and rows % num_devices == 0):
         # an indivisible batch cannot shard evenly; falls through to local
         return "segmented"
-    if (rows == 1 and batch_ndim == 0 and num_devices > 1
-            and n >= num_devices ** 2):
-        return "distributed"
-    if n <= MAX_LOCAL_N:
+    if rows == 1 and batch_ndim == 0 and num_devices > 1:
+        if len(shape) == 1 and shape[0] >= num_devices ** 2:
+            return "distributed"
+        if (len(shape) == 2 and kplan.is_pow2(num_devices)
+                and all(d % num_devices == 0 for d in shape)):
+            return "distributed"  # pencil: shard rows, one exchange
+    if fits:
         return "local"
     raise ValueError(
-        f"cannot auto-place n={n}: larger than the single-device maximum "
-        f"({MAX_LOCAL_N}) but not distributable — the cross-device "
-        f"four-step needs a scalar batch_shape and n >= D^2="
-        f"{num_devices ** 2} (D={num_devices} devices)")
+        f"cannot auto-place shape={shape}: larger than the single-device "
+        f"maximum but not distributable — the cross-device engines need a "
+        f"scalar batch_shape and either a 1-D signal with n >= D^2="
+        f"{num_devices ** 2} or a 2-D image with both axes divisible by "
+        f"D={num_devices}")
 
 
 def _validate_distributed(n: int, num_devices: int, axes) -> None:
-    """The transpose-based distributed FFT constraint, surfaced early.
+    """The transpose-based 1-D distributed FFT constraint, surfaced early.
 
     The four-step split n = n1 * n2 must satisfy D | n1 and D | n2 so each
     all_to_all exchanges equal shards — i.e. n >= D^2 for pow2 D.
@@ -117,11 +158,65 @@ def _validate_distributed(n: int, num_devices: int, axes) -> None:
             f"block-sized transforms")
 
 
-def resolve(kind: str, n: int, batch_shape, placement: str, layout: str,
-            impl: str, precision: str, interpret: bool | None,
-            batch_tile: int | None, num_devices: int | None, axes,
-            natural_order: bool, fuse_twiddle: bool,
-            overlap="auto") -> FftSpec:
+def _validate_pencil(shape: tuple, num_devices: int, axes) -> None:
+    """The 2-D pencil decomposition constraints, surfaced early.
+
+    Input rows (axis 0) shard over D, and the single transpose exchange
+    splits the columns — so BOTH axes must be divisible by D. The column
+    pass runs as one kernel, so axis 0 additionally caps at MAX_LEAF.
+    """
+    if not kplan.is_pow2(num_devices):
+        raise ValueError(
+            f"distributed placement needs a power-of-two device count "
+            f"along {axes}, got D={num_devices}")
+    n0, n1 = shape
+    for ax_i, d in enumerate(shape):
+        if d % num_devices:
+            raise ValueError(
+                f"distributed pencil shapes need every sharded axis "
+                f"divisible by D: axis {ax_i} of shape {shape} is {d}, "
+                f"not divisible by D={num_devices} (axes {axes})")
+    if n0 > kplan.MAX_LEAF:
+        raise ValueError(
+            f"pencil axis 0 runs as one column-kernel pass per device, so "
+            f"it caps at MAX_LEAF={kplan.MAX_LEAF}; got n0={n0}")
+    if n1 > MAX_LOCAL_N:
+        raise ValueError(
+            f"pencil axis 1 runs the local level-0/1 path, so it caps at "
+            f"MAX_LEAF**2={MAX_LOCAL_N}; got n1={n1}")
+
+
+def _normalize_shape(n, shape) -> tuple:
+    if (n is None) == (shape is None):
+        raise ValueError(
+            "pass exactly one of n= (1-D sugar) or shape= (N-D tuple)")
+    if shape is None:
+        shape = (int(n),)
+    elif isinstance(shape, int):
+        shape = (int(shape),)
+    else:
+        shape = tuple(int(d) for d in shape)
+    if not shape or len(shape) > 3:
+        raise ValueError(
+            f"shape must have 1-3 transform axes, got {shape}")
+    for ax_i, d in enumerate(shape):
+        if not kplan.is_pow2(d):
+            raise ValueError(
+                f"every transform axis must be a power of two; axis "
+                f"{ax_i} of shape {shape} is {d}")
+    if len(shape) > 1 and min(shape) < 2:
+        raise ValueError(
+            f"N-D transform axes must be >= 2, got shape {shape}")
+    return shape
+
+
+def resolve(kind: str, n=None, batch_shape=(), placement: str = "auto",
+            layout: str = "zero_copy", impl: str = "matfft",
+            precision: str = "f32", interpret: bool | None = None,
+            batch_tile: int | None = None, num_devices: int | None = None,
+            axes=None, natural_order: bool = True,
+            fuse_twiddle: bool = False, overlap="auto", shape=None,
+            r2c_axis: int = -1) -> FftSpec:
     """Validate + normalize everything into a frozen FftSpec."""
     if kind not in KINDS:
         raise ValueError(f"unknown kind {kind!r}; expected one of {KINDS}")
@@ -135,10 +230,19 @@ def resolve(kind: str, n: int, batch_shape, placement: str, layout: str,
     if precision not in PRECISIONS:
         raise ValueError(
             f"unsupported precision {precision!r}; supported: {PRECISIONS}")
-    n = int(n)
-    kplan.log2i(n)  # raises for non-pow2 / non-positive
-    if kind == "r2c" and n < 2:
-        raise ValueError(f"r2c needs n >= 2, got n={n}")
+    shape = _normalize_shape(n, shape)
+    ndim = len(shape)
+    if kind == "r2c":
+        if shape[-1] < 2:
+            raise ValueError(f"r2c needs n >= 2, got n={shape[-1]}")
+        ax = r2c_axis if r2c_axis >= 0 else ndim + r2c_axis
+        if ax != ndim - 1:
+            raise ValueError(
+                f"r2c_axis={r2c_axis} is not the contiguous axis: the "
+                f"packed-real fast path reads n reals as n/2 complex via a "
+                f"free reshape, which only the LAST transform axis "
+                f"(r2c_axis=-1) supports; transpose the operand or use "
+                f"kind='c2c'")
     batch_shape = tuple(int(d) for d in batch_shape)
     if any(d < 1 for d in batch_shape):
         raise ValueError(f"batch_shape dims must be >= 1, got {batch_shape}")
@@ -147,13 +251,16 @@ def resolve(kind: str, n: int, batch_shape, placement: str, layout: str,
 
     rows = math.prod(batch_shape)
     if placement == "auto":
-        placement = resolve_placement(n, rows, len(batch_shape), num_devices)
+        placement = resolve_placement(shape, rows, len(batch_shape),
+                                      num_devices)
 
     if placement == "local":
-        if n > MAX_LOCAL_N:
+        if not _fits_local(shape):
             raise ValueError(
-                f"placement='local' caps n at MAX_LEAF**2={MAX_LOCAL_N}, "
-                f"got n={n}; use placement='distributed' with a mesh")
+                f"placement='local' caps the contiguous axis at "
+                f"MAX_LEAF**2={MAX_LOCAL_N} and earlier axes at "
+                f"MAX_LEAF={kplan.MAX_LEAF}, got shape={shape}; use "
+                f"placement='distributed' with a mesh")
         axes = None
     elif placement == "segmented":
         if num_devices is None:
@@ -161,11 +268,12 @@ def resolve(kind: str, n: int, batch_shape, placement: str, layout: str,
         if len(batch_shape) != 1:
             raise ValueError(
                 f"placement='segmented' shards a 1-D batch of segments; "
-                f"reshape to (batch, n), got batch_shape={batch_shape}")
-        if n > MAX_LOCAL_N:
+                f"reshape to (batch, *shape), got batch_shape={batch_shape}")
+        if not _fits_local(shape):
             raise ValueError(
-                f"segmented segments run device-locally, so n caps at "
-                f"MAX_LEAF**2={MAX_LOCAL_N}, got n={n}")
+                f"segmented segments run device-locally, so the contiguous "
+                f"axis caps at MAX_LEAF**2={MAX_LOCAL_N} and earlier axes "
+                f"at MAX_LEAF={kplan.MAX_LEAF}, got shape={shape}")
         if rows % num_devices:
             raise ValueError(
                 f"segmented batch of {rows} rows does not shard evenly "
@@ -174,30 +282,45 @@ def resolve(kind: str, n: int, batch_shape, placement: str, layout: str,
     else:  # distributed
         if num_devices is None:
             raise ValueError("placement='distributed' requires mesh=")
-        if kind != "c2c":
-            raise ValueError(
-                "kind='r2c' is not supported for placement='distributed'; "
-                "run a c2c transform of the packed signal or use "
-                "placement='segmented' for batches of real segments")
         if batch_shape != ():
             raise ValueError(
                 f"placement='distributed' transforms ONE global signal of "
-                f"shape (n,); got batch_shape={batch_shape} — use "
+                f"shape {shape}; got batch_shape={batch_shape} — use "
                 f"placement='segmented' for batches")
-        _validate_distributed(n, num_devices, axes)
+        if ndim == 1:
+            if kind != "c2c":
+                raise ValueError(
+                    "kind='r2c' is not supported for 1-D "
+                    "placement='distributed'; run a c2c transform of the "
+                    "packed signal or use placement='segmented' for "
+                    "batches of real segments")
+            _validate_distributed(shape[0], num_devices, axes)
+        elif ndim == 2:
+            # r2c pencil rides the c2c engine + a one-sided slice (the
+            # packed-real halving doesn't compose with the exchange's
+            # column split); documented in DESIGN.md §9
+            _validate_pencil(shape, num_devices, axes)
+        else:
+            raise ValueError(
+                f"placement='distributed' supports 1-D and 2-D shapes, "
+                f"got {shape}; 3-D pencil volumes are a ROADMAP item")
 
     if placement == "distributed":
         # resolve "auto" and validate explicit chunk counts NOW, so an
         # indivisible chunks value is a plan-time ValueError and the
         # resolved spec (the cache key) never carries "auto". Lazy import:
         # the strategy module imports executors, not this spec module.
-        from repro.core.fft.distributed import resolve_overlap
-        chunks = resolve_overlap(n, num_devices, overlap)
+        if ndim == 1:
+            from repro.core.fft.distributed import resolve_overlap
+            chunks = resolve_overlap(shape[0], num_devices, overlap)
+        else:
+            from repro.core.fft.distributed import resolve_overlap_pencil
+            chunks = resolve_overlap_pencil(shape, num_devices, overlap)
         overlap = "off" if chunks is None else int(chunks)
     else:
         overlap = "off"
 
-    spec = FftSpec(kind=kind, n=n, batch_shape=batch_shape,
+    spec = FftSpec(kind=kind, shape=shape, batch_shape=batch_shape,
                    placement=placement, layout=layout, impl=impl,
                    precision=precision, interpret=interpret,
                    batch_tile=batch_tile,
@@ -206,6 +329,7 @@ def resolve(kind: str, n: int, batch_shape, placement: str, layout: str,
                    fuse_twiddle=bool(fuse_twiddle),
                    overlap=overlap)
     # normalize placement-irrelevant knobs so equivalent specs cache-hit
-    if placement != "distributed":
+    # (the pencil engine has no outer twiddle and is always natural-order)
+    if placement != "distributed" or len(shape) > 1:
         spec = replace(spec, natural_order=True, fuse_twiddle=False)
     return spec

@@ -450,43 +450,10 @@ def matfft_cols(xr: jnp.ndarray, xi: jnp.ndarray, *, out_major: str = "row",
     )(xr, xi, w1r, w1i, tr, ti, w2r, w2i, er, ei)
 
 
-def four_step_zero_copy(xr: jnp.ndarray, xi: jnp.ndarray, n1: int, n2: int,
-                        *, col_tile: int | None = None,
-                        interpret: bool = True
-                        ) -> tuple[jnp.ndarray, jnp.ndarray]:
-    """Level-1 four-step with ZERO materialized transposes (DESIGN.md §3).
-
-    The legacy path reshapes+swapaxes three times between the two leaf
-    passes (to_cols / to_rows / out_order), each a full HBM read+write of
-    the whole signal. Here both passes are column-strided kernels over free
-    reshapes of the same buffers:
-
-      pass 1  x viewed (rows, n1, n2): FFT the n1-columns, outer twiddle
-              fused in the epilogue, output row-major (rows*n2, n1)
-      pass 2  that viewed (rows, n2, n1): FFT the n2-columns, output
-              written column-major — which IS the o2-major final order
-
-    HBM traffic: one read + one write per pass (4 traversals total) vs the
-    legacy 10; see plan.four_step_hbm_bytes.
-    """
-    rows, n = xr.shape
-    assert n == n1 * n2
-
-    # T[o1, i2] -> (i2, o1): pass-1 output row (b, i2) is multiplied by
-    # T^T[i2, :] — period n2 == the pass-1 column count, no O(batch*n)
-    # twiddle tensor.
-    tr, ti = fft_plan.twiddle_table(n1, n2, n)
-    epi = (jnp.asarray(tr.T.copy()), jnp.asarray(ti.T.copy()))
-
-    ar, ai = matfft_cols(xr.reshape(rows, n1, n2), xi.reshape(rows, n1, n2),
-                         out_major="row", epilogue=epi, col_tile=col_tile,
-                         interpret=interpret)  # (rows*n2, n1), row (b, i2)
-
-    cr, ci = matfft_cols(ar.reshape(rows, n2, n1), ai.reshape(rows, n2, n1),
-                         out_major="col", col_tile=col_tile,
-                         interpret=interpret)  # (rows, n2, n1) = [b, o2, o1]
-
-    return cr.reshape(rows, n), ci.reshape(rows, n)
+# NOTE: the level-1 four-step that chained two matfft_cols calls
+# (`four_step_zero_copy`) moved to repro/fft/executors.py, re-expressed on
+# the shared `axis_pass` builder — the same primitive that powers the true
+# N-D fftn/rfftn passes and the distributed pass boundaries.
 
 
 # ---------------------------------------------------------------------------
@@ -520,14 +487,18 @@ def untangle_half_spectrum(yr, yi, vr, vi):
             jnp.concatenate([xi, jnp.zeros_like(nyq)], axis=-1))
 
 
-def _rfft_kernel(*refs, direct: bool, n1: int, n2: int):
+def _rfft_kernel(*refs, direct: bool, n1: int, n2: int,
+                 untangle: bool = True):
     """Half-length DFT of packed real input + conjugate-symmetry untangle.
 
     The input tile is the natural (bt, n) real block — lane-aligned in HBM;
     the even/odd split into z[b, k] = x[b, 2k] + i*x[b, 2k+1] happens on
-    the tile in VMEM. After the half-length DFT the untangle
-    (untangle_half_spectrum) runs fused in the epilogue — the one-sided
-    (bt, m+1) spectrum is the only thing that ever leaves VMEM.
+    the tile in VMEM. With ``untangle=True`` the one-sided (bt, m+1)
+    spectrum (untangle_half_spectrum fused in the epilogue) is the only
+    thing that ever leaves VMEM; ``untangle=False`` stores the raw packed
+    (bt, m) half spectrum instead — the N-D rfftn path defers the untangle
+    until after the remaining axes' passes (it commutes with them) so every
+    intermediate stays pow2-wide.
     """
     if direct:
         (x_ref, wr_ref, wi_ref, vr_ref, vi_ref, outr_ref, outi_ref) = refs
@@ -545,40 +516,37 @@ def _rfft_kernel(*refs, direct: bool, n1: int, n2: int):
                                  tr_ref[...], ti_ref[...],
                                  w2r_ref[...], w2i_ref[...], n1=n1, n2=n2)
 
-    outr, outi = untangle_half_spectrum(yr, yi, vr_ref[...], vi_ref[...])
-    outr_ref[...] = outr
-    outi_ref[...] = outi
+    if untangle:
+        yr, yi = untangle_half_spectrum(yr, yi, vr_ref[...], vi_ref[...])
+    outr_ref[...] = yr
+    outi_ref[...] = yi
 
 
-def rfft_leaf(x: jnp.ndarray, *, batch_tile: int | None = None,
-              interpret: bool = True) -> tuple[jnp.ndarray, jnp.ndarray]:
-    """One-sided spectrum of real (rows, n) input, n pow2 with n//2 a leaf
-    length. Returns planar (rows, n//2 + 1) arrays.
-
-    Costs one HALF-length DFT: the packing is a free reshape (the kernel
-    reads the real buffer directly), and the untangle runs in the kernel
-    epilogue — ~50% of the flops and HBM bytes of the complex path.
-    """
+def _rfft_pallas(x: jnp.ndarray, batch_tile: int | None, interpret: bool,
+                 untangle: bool, what: str
+                 ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Shared plumbing behind rfft_leaf / rfft_pack_leaf (see those)."""
     if x.ndim != 2:
-        raise ValueError(f"rfft_leaf expects 2-D (rows, n), got {x.shape}")
+        raise ValueError(f"{what} expects 2-D (rows, n), got {x.shape}")
     rows, n = x.shape
     fft_plan.log2i(n)
     if n < 4:
-        raise ValueError(f"rfft_leaf needs n >= 4, got {n}")
+        raise ValueError(f"{what} needs n >= 4, got {n}")
     m = n // 2
     p = fft_plan.make_plan(m)
     if p.levels != 1:
-        raise ValueError(f"n={n} exceeds rfft_leaf capacity; use ops.rfft")
+        raise ValueError(f"n={n} exceeds {what} capacity; use ops.rfft")
 
     bt = batch_tile or default_batch_tile(m)
     pad = (-rows) % bt
     if pad:
         x = jnp.pad(x, ((0, pad), (0, 0)))
     grid = (x.shape[0] // bt,)
+    width = m + 1 if untangle else m
 
     in_spec = pl.BlockSpec((bt, n), lambda i: (i, 0))
-    out_spec = pl.BlockSpec((bt, m + 1), lambda i: (i, 0))
-    out_shape = [jax.ShapeDtypeStruct((x.shape[0], m + 1), jnp.float32)] * 2
+    out_spec = pl.BlockSpec((bt, width), lambda i: (i, 0))
+    out_shape = [jax.ShapeDtypeStruct((x.shape[0], width), jnp.float32)] * 2
     vr, vi = (jnp.asarray(a) for a in fft_plan.rfft_twiddle(n))
 
     def table_spec(shape):
@@ -586,7 +554,8 @@ def rfft_leaf(x: jnp.ndarray, *, batch_tile: int | None = None,
 
     if m <= DIRECT_N:
         wr, wi = (jnp.asarray(a) for a in fft_plan.dft_matrix(m))
-        kernel = functools.partial(_rfft_kernel, direct=True, n1=0, n2=0)
+        kernel = functools.partial(_rfft_kernel, direct=True, n1=0, n2=0,
+                                   untangle=untangle)
         yr, yi = pl.pallas_call(
             kernel,
             grid=grid,
@@ -596,7 +565,7 @@ def rfft_leaf(x: jnp.ndarray, *, batch_tile: int | None = None,
             out_specs=[out_spec, out_spec],
             out_shape=out_shape,
             interpret=interpret,
-            name=f"rfft_direct_{n}",
+            name=f"{what}_direct_{n}",
         )(x, wr, wi, vr, vi)
     else:
         m1, m2 = p.n1, p.n2
@@ -604,7 +573,8 @@ def rfft_leaf(x: jnp.ndarray, *, batch_tile: int | None = None,
         w2r, w2i = (jnp.asarray(a) for a in fft_plan.dft_matrix(m2))
         tr, ti = (jnp.asarray(a.T.copy())
                   for a in fft_plan.twiddle_table(m1, m2, m))
-        kernel = functools.partial(_rfft_kernel, direct=False, n1=m1, n2=m2)
+        kernel = functools.partial(_rfft_kernel, direct=False, n1=m1, n2=m2,
+                                   untangle=untangle)
         yr, yi = pl.pallas_call(
             kernel,
             grid=grid,
@@ -616,9 +586,35 @@ def rfft_leaf(x: jnp.ndarray, *, batch_tile: int | None = None,
             out_specs=[out_spec, out_spec],
             out_shape=out_shape,
             interpret=interpret,
-            name=f"rfft_{m1}x{m2}",
+            name=f"{what}_{m1}x{m2}",
         )(x, w1r, w1i, tr, ti, w2r, w2i, vr, vi)
 
     if pad:
         yr, yi = yr[:rows], yi[:rows]
     return yr, yi
+
+
+def rfft_leaf(x: jnp.ndarray, *, batch_tile: int | None = None,
+              interpret: bool = True) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """One-sided spectrum of real (rows, n) input, n pow2 with n//2 a leaf
+    length. Returns planar (rows, n//2 + 1) arrays.
+
+    Costs one HALF-length DFT: the packing is a free reshape (the kernel
+    reads the real buffer directly), and the untangle runs in the kernel
+    epilogue — ~50% of the flops and HBM bytes of the complex path.
+    """
+    return _rfft_pallas(x, batch_tile, interpret, True, "rfft")
+
+
+def rfft_pack_leaf(x: jnp.ndarray, *, batch_tile: int | None = None,
+                   interpret: bool = True
+                   ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Raw packed half spectrum of real (rows, n) input: DFT_m of
+    x[:, 0::2] + i*x[:, 1::2], (rows, n//2) planar, NO untangle.
+
+    The N-D rfftn contiguous-axis pass: the kernel still reads the natural
+    real rows (no even/odd planes in HBM) but keeps the half spectrum
+    pow2-wide so the remaining axes' column passes stay zero-copy; the
+    untangle runs once, vectorized, after them (executors.rfftn).
+    """
+    return _rfft_pallas(x, batch_tile, interpret, False, "rfft_pack")

@@ -23,6 +23,7 @@ straight to the executors.
 from __future__ import annotations
 
 import functools
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -31,6 +32,28 @@ import repro.fft as fft_api
 from repro.fft import executors as _ex
 
 Planar = tuple[jnp.ndarray, jnp.ndarray]
+
+# one DeprecationWarning per public entry point per process — repeated
+# calls (the whole point of the old per-call API) stay quiet after the
+# first. Internal `global_twiddle` calls never warn: that path is the
+# distributed engine's layout-level plumbing, not a user migration target.
+_WARNED: set = set()
+
+
+def _warn_deprecated(name: str) -> None:
+    if name in _WARNED:
+        return
+    _WARNED.add(name)
+    warnings.warn(
+        f"repro.kernels.fft.ops.{name} is deprecated; plan once with "
+        f"repro.fft.plan(...) and reuse the returned ExecutablePlan "
+        f"(execute/execute_real/execute_inverse)",
+        DeprecationWarning, stacklevel=3)
+
+
+def _reset_deprecation_warnings() -> None:
+    """Test hook: make each entry point warn again."""
+    _WARNED.clear()
 
 
 def fft(xr: jnp.ndarray, xi: jnp.ndarray, *, impl: str = "matfft",
@@ -42,10 +65,12 @@ def fft(xr: jnp.ndarray, xi: jnp.ndarray, *, impl: str = "matfft",
     """
     if global_twiddle is not None:
         # internal distributed path: the traced row offset cannot key a
-        # process-level plan cache, so run the executor directly
+        # process-level plan cache, so run the executor directly (no
+        # deprecation warning — nothing for the caller to migrate)
         return _ex.fft(xr, xi, impl=impl, interpret=interpret,
                        batch_tile=batch_tile, global_twiddle=global_twiddle,
                        layout=layout)
+    _warn_deprecated("fft")
     p = fft_api.plan(kind="c2c", n=xr.shape[-1], batch_shape=xr.shape[:-1],
                      layout=layout, impl=impl, interpret=interpret,
                      batch_tile=batch_tile)
@@ -69,6 +94,7 @@ def ifft(xr: jnp.ndarray, xi: jnp.ndarray, *, impl: str = "matfft",
          interpret: bool | None = None, batch_tile: int | None = None,
          layout: str = "zero_copy") -> Planar:
     """Deprecated shim: inverse FFT. See `ExecutablePlan.execute_inverse`."""
+    _warn_deprecated("ifft")
     p = fft_api.plan(kind="c2c", n=xr.shape[-1], batch_shape=xr.shape[:-1],
                      layout=layout, impl=impl, interpret=interpret,
                      batch_tile=batch_tile)
@@ -95,6 +121,7 @@ def rfft(x: jnp.ndarray, *, impl: str = "matfft",
 
     See `repro.fft.plan(kind="r2c", ...)` / `ExecutablePlan.execute_real`.
     """
+    _warn_deprecated("rfft")
     x = x.astype(jnp.float32)
     if x.shape[-1] < 2:
         # degenerate n=1 predates the facade's r2c domain (n >= 2)
@@ -110,6 +137,7 @@ def irfft(yr: jnp.ndarray, yi: jnp.ndarray, *, impl: str = "matfft",
           interpret: bool | None = None, batch_tile: int | None = None,
           layout: str = "zero_copy") -> jnp.ndarray:
     """Deprecated shim: inverse of rfft, one-sided spectrum -> real signal."""
+    _warn_deprecated("irfft")
     n = 2 * (yr.shape[-1] - 1)
     if n < 2:
         # degenerate 1-bin spectrum predates the facade's r2c domain

@@ -189,6 +189,63 @@ def rfft_hbm_bytes(n: int, max_leaf: int = MAX_LEAF) -> int:
     return pack + fft_hbm_bytes(m, "zero_copy", max_leaf) + untangle
 
 
+def fftn_hbm_bytes(shape, layout: str = "zero_copy",
+                   max_leaf: int = MAX_LEAF) -> int:
+    """HBM bytes moved per batch row (one image/volume) by the N-D c2c
+    transform over the trailing ``len(shape)`` axes.
+
+    zero_copy: the contiguous (last) axis runs the 1-D row-major path
+    (level-0/1, see fft_hbm_bytes); every earlier axis is ONE column-strided
+    pass — read 2 planes + write 2 planes of the whole image, with the
+    transpose absorbed into the kernel's BlockSpec. No transposed tensor
+    ever lands in HBM between passes.
+
+    copy (the naive baseline bench_fft2.py gates against): each
+    non-contiguous axis is brought to the minor position by a materialized
+    swapaxes, row-FFT'd, and swapped back — two extra full round-trips of
+    the image per axis on top of the pass itself.
+    """
+    shape = tuple(int(d) for d in shape)
+    n_last = shape[-1]
+    total_n = math.prod(shape)
+    total = (total_n // n_last) * fft_hbm_bytes(n_last, layout, max_leaf)
+    per_pass = 2 * 2 * _F32 * total_n  # 2 planes in + 2 planes out
+    for _ in shape[:-1]:
+        total += per_pass
+        if layout != "zero_copy":
+            total += 2 * per_pass  # swapaxes there and back, materialized
+    return total
+
+
+def rfftn_hbm_bytes(shape, max_leaf: int = MAX_LEAF) -> int:
+    """HBM bytes per batch row for the N-D real-input fast path.
+
+    The packed-real trick rides the contiguous axis: n_last reals enter as
+    n_last/2 complex via a free reshape, the remaining axes transform the
+    half-width spectrum (conjugate untangle commutes with the other axes'
+    DFTs — both are linear maps over different axes), and ONE vectorized
+    untangle epilogue widens m -> m+1 bins at the end.
+    """
+    shape = tuple(int(d) for d in shape)
+    if len(shape) == 1:
+        return rfft_hbm_bytes(shape[0], max_leaf)
+    n_last = shape[-1]
+    m = n_last // 2
+    rows_last = math.prod(shape[:-1])
+    half_n = rows_last * m  # complex points after packing
+    # pass over the contiguous axis: the fused kernel (rfft_pack_leaf)
+    # reads the real rows and writes the packed half-spectrum planes; when
+    # the half transform is level-1 the pack happens on the host (one
+    # round trip) before the full half-length zero-copy transform
+    pass_a = rows_last * (_F32 * n_last + 2 * _F32 * m)
+    if make_plan(m, max_leaf).levels != 1:
+        pass_a += rows_last * fft_hbm_bytes(m, "zero_copy", max_leaf)
+    per_pass = 2 * 2 * _F32 * half_n
+    passes_rest = (len(shape) - 1) * per_pass
+    untangle = 2 * 2 * _F32 * half_n + 2 * _F32 * rows_last * (m + 1)
+    return pass_a + passes_rest + untangle
+
+
 def make_plan(n: int, max_leaf: int = MAX_LEAF) -> FftPlan:
     if n <= max_leaf:
         n1, n2 = (1, n) if n <= 2 else split_pow2(n, max_leaf)

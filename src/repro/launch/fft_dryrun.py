@@ -16,6 +16,10 @@ costs are exact — no scans in this path):
                  output round-trip)
   dist_transposed + natural_order=False (skip all_to_all #3, FFTW
                  TRANSPOSED_OUT) for convolution-style consumers
+  pencil2d       2-D pencil decomposition of an equal-point image
+                 (default 16384 x 16384 = 2^28 points): rows sharded,
+                 local axis passes, ONE transpose exchange — a third of
+                 dist_base's collective bytes for the same point count
 
 Each distributed record also carries the plan's exposed-vs-total
 collective split, and a `dist_overlap*_analytic` record reports the
@@ -78,6 +82,8 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--n", type=int, default=1 << 28,
                     help="global FFT length (distributed variants)")
+    ap.add_argument("--n2d", type=int, nargs=2, default=[1 << 14, 1 << 14],
+                    help="global image shape (pencil2d variant)")
     ap.add_argument("--seg-batch", type=int, default=1 << 15)
     ap.add_argument("--seg-len", type=int, default=4096)
     ap.add_argument("--mesh", default="single_pod",
@@ -108,6 +114,16 @@ def main(argv=None):
                          placement="distributed", axes=axes, overlap="off",
                          **kw)
         recs.append(measure(p, (sig, sig), name))
+
+    # 2-D pencil: same machinery, one exchange leg instead of three —
+    # the plan's collective counter is the headline (a third of
+    # dist_base's bytes at the same point count, DESIGN.md §9)
+    shape2d = tuple(args.n2d)
+    img = sds(shape2d, jnp.float32)
+    p_pencil = fft_api.plan(kind="c2c", shape=shape2d, mesh=mesh,
+                            placement="distributed", axes=axes,
+                            overlap="off")
+    recs.append(measure(p_pencil, (img, img), "pencil2d"))
 
     # predicted overlap win, analytic only (module docstring): plan the
     # chunked pipeline — never lower it — and report what its cost model

@@ -35,4 +35,15 @@ if [[ $# -eq 0 && -z "${REPRO_SKIP_DISTRIBUTED_BENCH:-}" ]]; then
   python benchmarks/bench_distributed.py --quick
 fi
 
-exec python -m pytest -x -q "$@"
+# 2-D transform gate: the transpose-free fft2/rfft2 plans must move
+# strictly fewer HBM bytes than the naive fft-rows -> materialized
+# transpose -> fft-rows baseline, stay bitwise-equal to it, and match
+# numpy (BENCH_fft2.json; exits nonzero on regression).
+if [[ $# -eq 0 && -z "${REPRO_SKIP_FFT2_BENCH:-}" ]]; then
+  python benchmarks/bench_fft2.py --quick
+fi
+
+# --durations: the bench-gated suite keeps growing; keep the slowest
+# tests visible in CI logs so the ~45 min job budget (ci.yml
+# timeout-minutes) is spent knowingly, not discovered on timeout.
+exec python -m pytest -x -q --durations=15 "$@"
