@@ -1,0 +1,249 @@
+"""Chaos gate: seeded fault schedules over the full pipelined FFT job.
+
+The resilience layer's acceptance property (DESIGN.md §10) is that a
+deterministic storm of injected failures — bad block reads, corrupt
+replicas, decode/launch/realize/writeback faults — changes NOTHING about
+the job's output, only its attempt counts. This benchmark proves it and
+records the trajectory in BENCH_chaos.json:
+
+  * **Chaos parity** — one pipelined job runs fault-free, then the SAME
+    store re-runs under a seeded `FaultPlan` (≥3 distinct injection
+    sites, ≥10% of blocks scheduled to fault, plus two physically
+    corrupted primary replicas). Gates: the merged outputs are bitwise
+    identical, no block exhausts its retry budget, the injector actually
+    fired, and the corrupted replicas were served via deep-verified
+    fallback AND repaired on disk (`StoreStats`).
+  * **Graceful degradation** — a distributed plan on an 8-device host
+    mesh loses two devices (`mesh.device` rules via
+    `FaultInjector.apply_device_loss`); `plan(..., fallback="degrade")`
+    must complete by re-planning on the shrunk healthy mesh instead of
+    raising, produce a numerically correct spectrum, and record a
+    "plan_downgrade" resilience event.
+
+Wall times for the fault-free vs chaos runs are recorded un-gated (the
+chaos overhead is retry work by design, not a regression signal). The
+schedule is a pure function of SEED — rerunning this benchmark anywhere
+replays byte-for-byte the same faults.
+"""
+
+from __future__ import annotations
+
+import os
+
+_flags = os.environ.get("XLA_FLAGS", "")
+if "xla_force_host_platform_device_count" not in _flags:
+    os.environ["XLA_FLAGS"] = (
+        _flags + " --xla_force_host_platform_device_count=8").strip()
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import json  # noqa: E402
+import shutil  # noqa: E402
+import tempfile  # noqa: E402
+import time  # noqa: E402
+from pathlib import Path  # noqa: E402
+
+import numpy as np  # noqa: E402
+
+from benchmarks.common import make_signal_store  # noqa: E402
+from repro.core.pipeline import (JobConfig, MapOnlyJob,  # noqa: E402
+                                 SegmentFFTTransform)
+from repro.core.resilience import (FaultInjector, FaultPlan,  # noqa: E402
+                                   FaultRule, clear_events, events)
+from repro.core.resilience import meshstate  # noqa: E402
+import repro.fft as fft_api  # noqa: E402
+
+OUT_PATH = Path(__file__).resolve().parent.parent / "BENCH_chaos.json"
+
+FFT_LEN = 512
+SEGMENTS_PER_BLOCK = 256  # 1 MB blocks
+SIZE_MB = 16              # -> 16 blocks
+SEED = 1407               # the chaos schedule is a pure function of this
+RATE = 0.25               # per (site, block) fault probability
+IMPL = "ref"              # orchestration under fault, not kernels
+# the seeded draw covers the per-block sites; replica faults fall back to
+# a healthy copy (replication=2) instead of failing the block, so the
+# worst per-block failure count is bounded by the other four sites
+DRAW_SITES = ("blockstore.read", "blockstore.replica", "blockstore.write",
+              "stream.decode", "stream.writeback")
+# explicit group-site rules: one hit fails a whole coalesced batch, so
+# they are scheduled deterministically rather than drawn per block
+GROUP_RULES = (FaultRule("stream.launch", 2), FaultRule("stream.realize", 3))
+COALESCE = 4
+# budget: worst case a block eats one fault per drawn failing site (4)
+# plus both group hits landing in its batch
+MAX_RETRIES = 8
+
+
+def _run_job(store, out_dir: Path, injector) -> tuple[dict, bytes, float]:
+    if out_dir.exists():
+        shutil.rmtree(out_dir)  # fresh manifest: re-run every block
+    cfg = JobConfig(readers=2, writers=2, coalesce=COALESCE, inflight=2,
+                    speculation=False, poll_interval_s=0.005,
+                    max_retries=MAX_RETRIES, injector=injector)
+    store.injector = injector
+    t0 = time.monotonic()
+    job = MapOnlyJob(store, out_dir, config=cfg, pipelined=True,
+                     transform=SegmentFFTTransform(FFT_LEN, impl=IMPL))
+    stats = job.run()
+    wall = time.monotonic() - t0
+    merged = out_dir.parent / f"{out_dir.name}_merged.bin"
+    job.merge(merged)
+    return stats, merged.read_bytes(), wall
+
+
+def _chaos_plan(num_blocks: int) -> FaultPlan:
+    drawn = FaultPlan.random(SEED, num_blocks, sites=DRAW_SITES, rate=RATE)
+    return FaultPlan(drawn.rules + GROUP_RULES, meta=dict(drawn.meta))
+
+
+def _degrade_scenario() -> dict:
+    """Distributed plan loses 2/8 devices; degrade must re-plan, not raise."""
+    import jax
+    from repro import compat
+
+    n = 1 << 12
+    rng = np.random.default_rng(SEED)
+    xr = rng.standard_normal(n).astype(np.float32)
+    xi = rng.standard_normal(n).astype(np.float32)
+    ref = np.fft.fft(xr + 1j * xi)
+
+    mesh = compat.make_mesh((len(jax.devices()),), ("x",))
+    plan_kw = dict(kind="c2c", n=n, mesh=mesh, placement="distributed")
+    fft_api.plan(**plan_kw)  # healthy-mesh plan now stale on device loss
+
+    inj = FaultInjector(FaultPlan.random(SEED, 0, rate=0.0,
+                                         device_loss=(6, 7)))
+    clear_events()
+    try:
+        lost = inj.apply_device_loss(mesh)
+        t0 = time.monotonic()
+        p = fft_api.plan(**plan_kw, fallback="degrade")
+        yr, yi = p.execute(xr, xi)
+        wall = time.monotonic() - t0
+        got = np.asarray(yr) + 1j * np.asarray(yi)
+        downgrades = events("plan_downgrade")
+    finally:
+        meshstate.restore_devices()
+    err = float(np.max(np.abs(got - ref)) / np.max(np.abs(ref)))
+    return {
+        "mesh_devices": int(mesh.devices.size),
+        "lost_devices": len(lost),
+        "degraded_devices": (int(p.mesh.devices.size)
+                             if p.mesh is not None else 0),
+        "degraded_placement": p.placement,
+        "replan_wall_s": round(wall, 4),
+        "rel_err": err,
+        "downgrade_events": downgrades,
+        "completed": True,
+    }
+
+
+def run(quick: bool = False):
+    fft_api.clear_plan_cache()
+    with tempfile.TemporaryDirectory() as tmp:
+        work = Path(tmp)
+        store, _ = make_signal_store(work / "in", size_mb=SIZE_MB,
+                                     fft_len=FFT_LEN,
+                                     segments_per_block=SEGMENTS_PER_BLOCK,
+                                     replication=2)
+        num_blocks = len(store.blocks)
+
+        base_stats, base_bytes, base_wall = _run_job(
+            store, work / "out_clean", injector=None)
+
+        # physical damage on top of the injected schedule: two primaries
+        # rot on disk, so the chaos run must survive REAL corruption too
+        store.corrupt_block(0, replica=0)
+        store.corrupt_block(1, replica=0)
+
+        plan = _chaos_plan(num_blocks)
+        injector = FaultInjector(plan)
+        chaos_stats, chaos_bytes, chaos_wall = _run_job(
+            store, work / "out_chaos", injector=injector)
+
+    raising = [r for r in plan.rules if r.site != "mesh.device"]
+    faulted_blocks = {r.index for r in raising if r.index is not None}
+    degrade = _degrade_scenario()
+
+    checks = {
+        # acceptance: chaos changes attempt counts, never output bits
+        "chaos_output_bitwise_identical": chaos_bytes == base_bytes,
+        "chaos_distinct_sites_ge_3":
+            len({r.site for r in raising}) >= 3,
+        "chaos_block_fault_rate_ge_10pct":
+            len(faulted_blocks) >= max(1, num_blocks // 10),
+        "chaos_faults_fired": injector.total_fired >= len(faulted_blocks),
+        "chaos_attempts_within_budget":
+            chaos_stats.attempts <= num_blocks * MAX_RETRIES,
+        "chaos_no_failed_blocks": not chaos_stats.failed_blocks,
+        # the corrupted primaries were served from replica 1 AND healed
+        "repair_heals_corrupt_replicas":
+            store.stats.fallback_reads >= 2 and store.stats.repairs >= 2,
+        # acceptance: device loss degrades to a working re-plan
+        "degrade_replan_completed": degrade["completed"],
+        "degrade_output_correct": degrade["rel_err"] < 1e-4,
+        "degrade_event_recorded": len(degrade["downgrade_events"]) >= 1,
+    }
+    doc = {
+        "quick": quick,
+        "config": {"size_mb": SIZE_MB, "blocks": num_blocks,
+                   "fft_len": FFT_LEN, "seed": SEED, "rate": RATE,
+                   "draw_sites": DRAW_SITES, "coalesce": COALESCE,
+                   "max_retries": MAX_RETRIES, "impl": IMPL},
+        "schedule": {"rules": len(plan.rules),
+                     "distinct_sites": sorted({r.site for r in raising}),
+                     "faulted_blocks": sorted(faulted_blocks),
+                     "block_fault_rate": round(
+                         len(faulted_blocks) / num_blocks, 3)},
+        "fault_free": {"wall_s": round(base_wall, 4),
+                       "attempts": base_stats.attempts,
+                       "retries": base_stats.retries},
+        "chaos": {"wall_s": round(chaos_wall, 4),
+                  "attempts": chaos_stats.attempts,
+                  "retries": chaos_stats.retries,
+                  "failed_blocks": chaos_stats.failed_blocks,
+                  "injector": injector.summary(),
+                  "store": store.stats.as_dict()},
+        "degrade": degrade,
+        "checks": checks,
+    }
+    OUT_PATH.write_text(json.dumps(doc, indent=1))
+
+    rows = [
+        {"name": "chaos_fault_free", "us_per_call": base_wall * 1e6,
+         "derived": f"attempts={base_stats.attempts} "
+                    f"retries={base_stats.retries}"},
+        {"name": "chaos_injected", "us_per_call": chaos_wall * 1e6,
+         "derived": f"attempts={chaos_stats.attempts} "
+                    f"retries={chaos_stats.retries} "
+                    f"fired={injector.total_fired} "
+                    f"repairs={store.stats.repairs}"},
+        {"name": "chaos_degrade", "us_per_call": degrade["replan_wall_s"]
+            * 1e6,
+         "derived": f"devices={degrade['mesh_devices']}->"
+                    f"{degrade['degraded_devices']} "
+                    f"placement={degrade['degraded_placement']} "
+                    f"rel_err={degrade['rel_err']:.2e}"},
+        {"name": "chaos_checks", "us_per_call": 0.0,
+         "derived": " ".join(f"{k}={'PASS' if ok else 'FAIL'}"
+                             for k, ok in checks.items())},
+    ]
+    return rows
+
+
+def main(argv=None) -> int:
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args(argv)
+    for row in run(quick=args.quick):
+        print(f"{row['name']},{row['us_per_call']:.1f},\"{row['derived']}\"")
+    checks = json.loads(OUT_PATH.read_text())["checks"]
+    if not all(checks.values()):
+        print(f"FAIL: {checks}")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

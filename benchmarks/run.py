@@ -12,9 +12,10 @@ import argparse
 import sys
 import traceback
 
-from benchmarks import (bench_distributed, bench_fft, bench_fft2,
-                        bench_pipeline, fig2_total_time, fig3_fft_time,
-                        fig45_io_fraction, fig6_scaling, roofline)
+from benchmarks import (bench_chaos, bench_distributed, bench_fft,
+                        bench_fft2, bench_pipeline, fig2_total_time,
+                        fig3_fft_time, fig45_io_fraction, fig6_scaling,
+                        roofline)
 
 MODULES = {
     "fig2": fig2_total_time,
@@ -25,6 +26,7 @@ MODULES = {
     "fft2": bench_fft2,
     "pipeline": bench_pipeline,
     "distributed": bench_distributed,
+    "chaos": bench_chaos,
     "roofline": roofline,
 }
 

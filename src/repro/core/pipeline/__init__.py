@@ -1,4 +1,4 @@
-from repro.core.pipeline.blockstore import BlockStore
+from repro.core.pipeline.blockstore import BlockStore, StoreStats
 from repro.core.pipeline.maponly import MapOnlyJob, JobConfig, JobStats
 from repro.core.pipeline.records import segments_of_block, block_of_segments
 from repro.core.pipeline.stream import (MapFnTransform, SegmentFFTTransform,
@@ -6,6 +6,6 @@ from repro.core.pipeline.stream import (MapFnTransform, SegmentFFTTransform,
                                         StreamTransform)
 
 __all__ = ["BlockStore", "MapOnlyJob", "JobConfig", "JobStats",
-           "segments_of_block", "block_of_segments", "StreamExecutor",
-           "StreamTransform", "SegmentFFTTransform", "MapFnTransform",
-           "StagingPool"]
+           "segments_of_block", "block_of_segments", "StoreStats",
+           "StreamExecutor", "StreamTransform", "SegmentFFTTransform",
+           "MapFnTransform", "StagingPool"]

@@ -15,7 +15,14 @@ The design choices mirror the paper directly:
     relies on, and ours does too (maponly.py);
   * optional replication: ``replication=r`` keeps r copies of each block;
     reads fall back to a replica when the primary is missing/corrupt
-    (checksum mismatch), simulating HDFS datanode failure.
+    (checksum mismatch), simulating HDFS datanode failure — and a
+    successful deep-verified fallback opportunistically repairs the
+    damaged copies (`repair_block`, HDFS's re-replication analogue).
+
+Replica iteration runs under the shared `RetryPolicy`
+(core/resilience/retry.py) and every read/write is a named fault-injection
+site (core/resilience/faults.py), so chaos runs can prove the fallback +
+repair behaviour deterministically (DESIGN.md §10).
 """
 
 from __future__ import annotations
@@ -24,11 +31,15 @@ import hashlib
 import json
 import os
 import tempfile
+import threading
 import zlib
 from dataclasses import dataclass, field
 from pathlib import Path
 
 import numpy as np
+
+from repro.core.resilience.faults import maybe_fire
+from repro.core.resilience.retry import RetryPolicy
 
 MANIFEST = "manifest.json"
 MERGE_CHUNK = 4 << 20  # getmerge streams block files in bounded chunks
@@ -60,6 +71,25 @@ def _atomic_write(path: Path, data) -> None:
         raise
 
 
+class StoreStats:
+    """Thread-safe read-path counters (reader threads hit these
+    concurrently): replica fallbacks served and replica copies repaired."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.fallback_reads = 0
+        self.repairs = 0
+
+    def bump(self, name: str, k: int = 1) -> None:
+        with self._lock:
+            setattr(self, name, getattr(self, name) + k)
+
+    def as_dict(self) -> dict:
+        with self._lock:
+            return {"fallback_reads": self.fallback_reads,
+                    "repairs": self.repairs}
+
+
 @dataclass
 class BlockInfo:
     index: int
@@ -80,6 +110,13 @@ class BlockStore:
     replication: int = 1
     blocks: list[BlockInfo] = field(default_factory=list)
     total_bytes: int = 0
+    # resilience wiring (never serialized into the manifest): a
+    # FaultInjector for chaos runs, an override RetryPolicy for the
+    # replica loop, and the fallback/repair counters
+    injector: object = field(default=None, repr=False, compare=False)
+    retry: RetryPolicy | None = field(default=None, repr=False, compare=False)
+    stats: StoreStats = field(default_factory=StoreStats, repr=False,
+                              compare=False)
 
     def __post_init__(self):
         self.root = Path(self.root)
@@ -152,22 +189,83 @@ class BlockStore:
             return _sha(data) == info.checksum
         return _crc(data) == info.crc32
 
+    def _replica_policy(self) -> RetryPolicy:
+        """The replica loop as a retry policy: attempt r = replica r,
+        immediate (no backoff — the next replica is a different disk)."""
+        return self.retry or RetryPolicy(
+            max_attempts=max(self.replication, 1),
+            retryable=(IOError, OSError))
+
     def read_block(self, index: int, verify: bool = True) -> bytes:
         info = self.blocks[index]
-        last_err: Exception | None = None
+        maybe_fire(self.injector, "blockstore.read", index)
+
+        def attempt(r: int) -> tuple[int, bytes]:
+            if r == 0:
+                maybe_fire(self.injector, "blockstore.replica", index)
+            path = self.root / info.name(r)
+            data = path.read_bytes()
+            # primary read pays only the cheap crc; a fallback replica
+            # is about to become the new source of truth, so it must
+            # match the cryptographic checksum before being served
+            if verify and not self._verify(data, info, deep=r > 0):
+                raise IOError(f"checksum mismatch on {path.name}")
+            return r, data
+
+        try:
+            r, data = self._replica_policy().call(attempt)
+        except (IOError, OSError) as e:  # every replica missing or corrupt
+            raise IOError(f"block {index}: all replicas failed") from e
+        if r > 0:
+            # served from a fallback replica: the primary (and any earlier
+            # copy) is broken — repair it now from the verified data, or
+            # it stays damaged until the LAST replica rots and the block
+            # is gone for good
+            self.stats.bump("fallback_reads")
+            if verify:
+                self.repair_block(index, data)
+        return data
+
+    def repair_block(self, index: int, data: bytes | None = None) -> int:
+        """Opportunistic replica repair: atomically rewrite every damaged
+        or missing copy of block ``index`` from a deep-verified good one.
+
+        ``data`` (when given) must match the manifest's SHA-256 ground
+        truth; otherwise the first replica that does is the source.
+        Returns the number of copies rewritten (0 = all were healthy).
+        Atomic per copy, so concurrent readers only ever see the old or
+        the repaired bytes, and repeated repairs are idempotent.
+        """
+        info = self.blocks[index]
+        if data is None:
+            for r in range(max(self.replication, 1)):
+                try:
+                    cand = (self.root / info.name(r)).read_bytes()
+                except OSError:
+                    continue
+                if _sha(cand) == info.checksum:
+                    data = cand
+                    break
+            if data is None:
+                raise IOError(
+                    f"block {index}: no intact replica to repair from")
+        elif _sha(data) != info.checksum:
+            raise ValueError(
+                f"block {index}: repair source fails the SHA-256 ground "
+                f"truth; refusing to propagate corruption")
+        repaired = 0
         for r in range(max(self.replication, 1)):
             path = self.root / info.name(r)
             try:
-                data = path.read_bytes()
-                # primary read pays only the cheap crc; a fallback replica
-                # is about to become the new source of truth, so it must
-                # match the cryptographic checksum before being served
-                if verify and not self._verify(data, info, deep=r > 0):
-                    raise IOError(f"checksum mismatch on {path.name}")
-                return data
-            except (IOError, OSError) as e:  # missing or corrupt replica
-                last_err = e
-        raise IOError(f"block {index}: all replicas failed") from last_err
+                if _sha(path.read_bytes()) == info.checksum:
+                    continue  # this copy is healthy
+            except OSError:
+                pass  # missing: rewrite below
+            _atomic_write(path, data)
+            repaired += 1
+        if repaired:
+            self.stats.bump("repairs", repaired)
+        return repaired
 
     def corrupt_block(self, index: int, replica: int = 0) -> None:
         """Test hook: damage one replica (simulated datanode failure)."""
@@ -178,6 +276,7 @@ class BlockStore:
     def write_output_block(self, out_dir: os.PathLike, index: int,
                            data: bytes) -> None:
         """Map-task output write: atomic, named by offset (mergeable)."""
+        maybe_fire(self.injector, "blockstore.write", index)
         out = Path(out_dir)
         out.mkdir(parents=True, exist_ok=True)
         _atomic_write(out / self.blocks[index].name(), data)

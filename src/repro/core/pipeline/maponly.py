@@ -34,6 +34,8 @@ from statistics import median
 from typing import Callable
 
 from repro.core.pipeline.blockstore import BlockStore
+from repro.core.resilience.faults import maybe_fire
+from repro.core.resilience.retry import RetryPolicy
 
 PENDING, RUNNING, DONE, FAILED = "PENDING", "RUNNING", "DONE", "FAILED"
 
@@ -41,7 +43,7 @@ PENDING, RUNNING, DONE, FAILED = "PENDING", "RUNNING", "DONE", "FAILED"
 @dataclass
 class JobConfig:
     workers: int = 4
-    max_retries: int = 3
+    max_retries: int = 3  # legacy knob: feeds the default RetryPolicy
     straggler_factor: float = 3.0
     speculation: bool = True
     min_completed_for_speculation: int = 3
@@ -51,6 +53,16 @@ class JobConfig:
     writers: int = 2      # writeback (D2H + encode + write) threads
     coalesce: int = 1     # same-shaped blocks fused into one device batch
     inflight: int = 2     # launched-but-unrealized batch window
+    # --- resilience (core/resilience; DESIGN.md §10) ---
+    # ONE retry policy for both execution paths. None = the legacy
+    # immediate-retry behaviour bounded by max_retries; pass a RetryPolicy
+    # for backoff + per-block deadlines. Backoff sleeps run on the
+    # coordinator/dispatcher thread through policy.sleep (injectable).
+    retry: RetryPolicy | None = None
+    injector: object = None  # FaultInjector for deterministic chaos runs
+
+    def retry_policy(self) -> RetryPolicy:
+        return self.retry or RetryPolicy(max_attempts=self.max_retries)
 
 
 @dataclass
@@ -120,11 +132,19 @@ class Manifest:
         snap = json.dumps({"type": "snapshot",
                            "tasks": [vars(t) for t in self.tasks.values()]})
         fd, tmp = tempfile.mkstemp(dir=self.path.parent, prefix=".mtmp_")
-        with os.fdopen(fd, "w") as f:
-            f.write(snap + "\n")
-            f.flush()
-            os.fsync(f.fileno())
-        os.replace(tmp, self.path)
+        try:
+            with os.fdopen(fd, "w") as f:
+                f.write(snap + "\n")
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(tmp, self.path)
+        except BaseException:
+            # crash-mid-compact: the journal at self.path is untouched
+            # (os.replace is all-or-nothing), so a reopen replays the SAME
+            # task states; just don't leak the tmp snapshot
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+            raise
         self._fh = open(self.path, "a")
 
     def close(self) -> None:
@@ -167,6 +187,10 @@ class JobStats:
     stage_s: dict[str, float] = field(default_factory=dict)
     batches: int = 0
     coalesced_blocks: int = 0
+    # blocks whose retry budget was exhausted this run: one structured
+    # {"index", "attempts", "error"} record each (the RuntimeError the job
+    # raises chains the last underlying exception as __cause__)
+    failed_blocks: list[dict] = field(default_factory=list)
 
 
 class MapOnlyJob:
@@ -200,6 +224,7 @@ class MapOnlyJob:
     # ------------------------------------------------------------------
     def _attempt(self, index: int) -> tuple[int, float]:
         t0 = time.monotonic()
+        maybe_fire(self.cfg.injector, "maponly.attempt", index)
         data = self.store.read_block(index)
         out = self.map_fn(data, index)
         self.store.write_output_block(self.out_dir, index, out)
@@ -226,10 +251,16 @@ class MapOnlyJob:
         inflight: dict[Future, tuple[int, float, bool]] = {}
         speculated: set[int] = set()
         completed: set[int] = set(self.manifest.done())
+        policy = cfg.retry_policy()
+        # per-block deadline clock + jitter chain (policy state); attempt
+        # COUNTS stay in the manifest so they survive crash-restarts
+        first_started: dict[int, float] = {}
+        retry_states: dict = {}
 
         with ThreadPoolExecutor(max_workers=cfg.workers) as pool:
 
             def launch(i: int, is_spec: bool) -> None:
+                first_started.setdefault(i, time.monotonic())
                 self.manifest.update(i, status=RUNNING,
                                      started_at=time.monotonic(),
                                      speculated=is_spec)
@@ -277,10 +308,14 @@ class MapOnlyJob:
                     else:
                         st = self.manifest.tasks[i]
                         attempts = st.attempts + 1
-                        if attempts >= cfg.max_retries:
+                        elapsed = now - first_started.get(i, now)
+                        if not policy.should_retry(attempts, elapsed, err):
                             self.manifest.update(i, status=FAILED,
                                                  attempts=attempts,
                                                  error=repr(err))
+                            self.stats.failed_blocks.append(
+                                {"index": i, "attempts": attempts,
+                                 "error": repr(err)})
                             raise RuntimeError(
                                 f"block {i} failed {attempts} times"
                             ) from err
@@ -288,6 +323,8 @@ class MapOnlyJob:
                         self.manifest.update(i, status=PENDING,
                                              attempts=attempts,
                                              error=repr(err))
+                        retry_states.setdefault(
+                            i, policy.new_state()).backoff()
                         launch(i, False)
 
         self.stats.wall_s = time.monotonic() - t_start

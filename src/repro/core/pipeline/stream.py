@@ -55,6 +55,7 @@ from repro.core.pipeline.blockstore import BlockStore
 from repro.core.pipeline.maponly import (DONE, FAILED, PENDING, RUNNING,
                                          JobConfig, JobStats, Manifest)
 from repro.core.pipeline.records import block_of_segments
+from repro.core.resilience.faults import maybe_fire
 
 STAGES = ("read", "h2d", "compute", "d2h", "write")
 
@@ -343,6 +344,14 @@ class StreamExecutor:
         # enqueue-based clocks grow with elapsed time and would both
         # inflate the median and mark merely-queued blocks as stragglers.
         self._started: dict[int, float] = {}
+        # resilience: the shared retry policy + optional fault injector
+        # (DESIGN.md §10). _first_started feeds the policy's per-block
+        # deadline and is never popped on retry (unlike _started, whose
+        # clock restarts so straggler detection stays per-attempt).
+        self._policy = cfg.retry_policy()
+        self._injector = cfg.injector
+        self._retry_states: dict = {}
+        self._first_started: dict[int, float] = {}
 
     # ------------------------------------------------------------------
     def _add_stage(self, stage: str, dt: float) -> None:
@@ -369,6 +378,7 @@ class StreamExecutor:
             try:
                 t0 = time.monotonic()
                 data = self.store.read_block(index)
+                maybe_fire(self._injector, "stream.decode", index)
                 d = self.transform.decode(data, index)
                 self._add_stage("read", time.monotonic() - t0)
                 self._put_decoded(("ok", index, is_spec, d))
@@ -386,6 +396,12 @@ class StreamExecutor:
                 # the window boundary: oldest batch realized -> next launch
                 self._inflight.release()
             self._add_stage("d2h", time.monotonic() - t0)
+            # fires only after realize: the staging set is back in the
+            # pool (realize's finally), so an injected fault here cannot
+            # leak pool capacity and starve the dispatcher
+            if self._injector is not None:
+                self._injector.fire_group(
+                    "stream.realize", [d.index for d, _ in group])
         except BaseException as e:
             for d, is_spec in group:
                 self._events.put(("err", d.index, is_spec, e))
@@ -395,6 +411,7 @@ class StreamExecutor:
         for d, is_spec in group:
             try:
                 t0 = time.monotonic()
+                maybe_fire(self._injector, "stream.writeback", d.index)
                 out = self.transform.encode(host, row0, d)
                 self.store.write_output_block(self.out_dir, d.index, out)
                 self._add_stage("write", time.monotonic() - t0)
@@ -441,6 +458,7 @@ class StreamExecutor:
                                  speculated=is_spec)
             if not is_spec:  # retry: restart the block's clock when a
                 self._started.pop(i, None)  # reader picks it up again
+            self._first_started.setdefault(i, time.monotonic())
             decode_pending += 1
             self.stats.attempts += 1
             if is_spec:
@@ -452,9 +470,13 @@ class StreamExecutor:
                 return
             st = self.manifest.tasks[i]
             attempts = st.attempts + 1
-            if attempts >= cfg.max_retries:
+            now = time.monotonic()
+            elapsed = now - self._first_started.get(i, now)
+            if not self._policy.should_retry(attempts, elapsed, err):
                 self.manifest.update(i, status=FAILED, attempts=attempts,
                                      error=repr(err))
+                self.stats.failed_blocks.append(
+                    {"index": i, "attempts": attempts, "error": repr(err)})
                 fatal.append(RuntimeError(
                     f"block {i} failed {attempts} times"))
                 fatal[-1].__cause__ = err
@@ -463,6 +485,10 @@ class StreamExecutor:
             self.stats.retries += 1
             self.manifest.update(i, status=PENDING, attempts=attempts,
                                  error=repr(err))
+            # backoff before relaunch; default policy has zero base delay,
+            # so legacy jobs keep their immediate-retry behaviour
+            self._retry_states.setdefault(
+                i, self._policy.new_state()).backoff()
             enqueue(i, False)
 
         def on_done(i: int, is_spec: bool, t_done: float) -> None:
@@ -516,6 +542,9 @@ class StreamExecutor:
                     return
             batch = None
             try:
+                if self._injector is not None:
+                    self._injector.fire_group(
+                        "stream.launch", [d.index for d, _ in group])
                 t0 = time.monotonic()
                 batch = self.transform.gather([d for d, _ in group])
                 self._add_stage("h2d", time.monotonic() - t0)

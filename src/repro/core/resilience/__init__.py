@@ -1,0 +1,49 @@
+"""`repro.core.resilience` — the cross-cutting resilience layer.
+
+The source paper's entire case for Hadoop over a dedicated supercomputer
+is commodity-server fault tolerance: disks corrupt, datanodes die,
+stragglers appear, and the job still finishes. The reproduction grew that
+behaviour piecemeal (per-block retry and speculation in
+`core/pipeline/maponly.py`, replica fallback in `blockstore.py`, the
+crash-replayable journal from the stream pipeline); this package makes it
+one subsystem that can be *proven* under systematic failure
+(DESIGN.md §10):
+
+  * `retry`     — ONE `RetryPolicy` (bounded attempts, exponential backoff
+                  with decorrelated jitter, per-op deadline, retryable
+                  exception classes, injectable clock/sleep) shared by the
+                  map-only job, the stream executor, and the BlockStore
+                  replica loop.
+  * `faults`    — a deterministic, seeded `FaultPlan`/`FaultInjector` with
+                  named injection sites threaded through every failure
+                  domain, so chaos runs are exactly reproducible.
+  * `meshstate` — the logical device-health registry behind
+                  `repro.fft.plan(..., fallback="degrade")`: simulated
+                  device loss shrinks or empties the mesh and the planner
+                  re-plans distributed -> segmented/local instead of dying.
+  * `events`    — the in-process event log (downgrades, device loss,
+                  repairs) that tests and the chaos gate assert on.
+
+Exercised end to end by `benchmarks/bench_chaos.py` (BENCH_chaos.json,
+gated in test.sh/CI) and `tests/test_chaos.py` (`pytest -m chaos`).
+"""
+
+from repro.core.resilience.events import clear_events, events, record_event
+from repro.core.resilience.faults import (SITES, FaultInjector, FaultPlan,
+                                          FaultRule, InjectedFault,
+                                          maybe_fire)
+from repro.core.resilience.retry import RetryPolicy, RetryState
+
+__all__ = [
+    "SITES",
+    "FaultInjector",
+    "FaultPlan",
+    "FaultRule",
+    "InjectedFault",
+    "RetryPolicy",
+    "RetryState",
+    "clear_events",
+    "events",
+    "maybe_fire",
+    "record_event",
+]

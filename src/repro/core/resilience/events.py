@@ -1,0 +1,43 @@
+"""In-process resilience event log.
+
+A tiny append-only registry the degradation machinery writes to and the
+chaos gate asserts on: planner downgrades (`repro.fft.plan(...,
+fallback="degrade")`), simulated device loss/restore (`meshstate`). Kept
+separate from Python logging so tests and benchmarks can make *structural*
+assertions ("exactly one downgrade event, from distributed to local")
+instead of grepping log text; every record is also mirrored to the
+``repro.resilience`` logger at WARNING for human eyes.
+"""
+
+from __future__ import annotations
+
+import logging
+import threading
+import time
+
+log = logging.getLogger("repro.resilience")
+
+_LOCK = threading.Lock()
+_EVENTS: list[dict] = []
+
+
+def record_event(kind: str, **fields) -> dict:
+    """Append one event ``{"kind": kind, "t": wall_time, **fields}``."""
+    ev = {"kind": kind, "t": time.time(), **fields}
+    with _LOCK:
+        _EVENTS.append(ev)
+    log.warning("resilience event: %s %s", kind, fields)
+    return ev
+
+
+def events(kind: str | None = None) -> list[dict]:
+    """Snapshot of recorded events, optionally filtered by kind."""
+    with _LOCK:
+        snap = list(_EVENTS)
+    return snap if kind is None else [e for e in snap if e["kind"] == kind]
+
+
+def clear_events() -> None:
+    """Reset the log (test/benchmark isolation)."""
+    with _LOCK:
+        _EVENTS.clear()

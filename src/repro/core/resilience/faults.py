@@ -1,0 +1,270 @@
+"""Deterministic, seeded fault injection across every failure domain.
+
+A chaos run that cannot be replayed is a flake generator, not a test. The
+design here makes the *schedule* — which (site, block, call-number)
+triples fault — a pure function of the `FaultPlan`, never of thread
+timing: the plan is fully materialized up front (explicit rules, or rules
+drawn once from a seeded RNG), and the injector counts calls per
+``(site, block)`` so "block 3's first pass through realize faults" means
+the same thing no matter how readers, the dispatcher, and writeback
+workers interleave.
+
+Injection sites (each threaded through its owning layer):
+
+  ==================  =====================================================
+  site                fires at
+  ==================  =====================================================
+  blockstore.read     `BlockStore.read_block` entry (I/O error -> the
+                      job-level retry budget)
+  blockstore.replica  the PRIMARY replica read inside the fallback loop
+                      (exercises replica fallback + opportunistic repair)
+  blockstore.write    `BlockStore.write_output_block` entry
+  stream.decode       reader thread, before `transform.decode`
+  stream.launch       dispatcher, before gather/launch (fires per group
+                      member; one hit fails the whole coalesced batch)
+  stream.realize      writeback worker, at the realization boundary —
+                      AFTER the device sync, so pooled staging is already
+                      safely released (simulates D2H/result corruption)
+  stream.writeback    writeback worker, before per-block encode + write
+  maponly.attempt     serial map-task attempt entry
+  mesh.device         not raised: rule ``index`` names a mesh device
+                      ordinal to mark lost in `meshstate` (consumed by
+                      `FaultInjector.apply_device_loss`; the planner's
+                      ``fallback="degrade"`` re-plans around it)
+  ==================  =====================================================
+
+All raising sites throw `InjectedFault` (an ``IOError`` subclass, so the
+replica loop and every retry policy classify it as retryable I/O).
+"""
+
+from __future__ import annotations
+
+import json
+import random
+import threading
+from dataclasses import dataclass, field
+
+SITES = (
+    "blockstore.read",
+    "blockstore.replica",
+    "blockstore.write",
+    "stream.decode",
+    "stream.launch",
+    "stream.realize",
+    "stream.writeback",
+    "maponly.attempt",
+    "mesh.device",
+)
+
+# sites a seeded random plan draws from by default: the raising, per-block
+# sites (mesh.device loss is a state change, scheduled explicitly)
+RANDOM_SITES = tuple(s for s in SITES if s != "mesh.device")
+
+
+class InjectedFault(IOError):
+    """A deterministic injected failure (retryable I/O by construction)."""
+
+
+def _check_site(site: str) -> str:
+    if site not in SITES:
+        raise ValueError(
+            f"unknown fault site {site!r}; expected one of {SITES}")
+    return site
+
+
+@dataclass(frozen=True)
+class FaultRule:
+    """One scheduled fault: fire at ``site`` for block ``index`` on the
+    given per-(site, index) ``calls`` (1-based; ``index=None`` matches
+    every block, still counted per block)."""
+
+    site: str
+    index: int | None = None
+    calls: tuple = (1,)
+
+    def __post_init__(self):
+        _check_site(self.site)
+        calls = tuple(int(c) for c in self.calls)
+        if not calls or min(calls) < 1:
+            raise ValueError(f"calls must be 1-based call numbers, "
+                             f"got {self.calls}")
+        object.__setattr__(self, "calls", calls)
+
+
+@dataclass(frozen=True)
+class FaultPlan:
+    """A fully-materialized fault schedule (a tuple of `FaultRule`s).
+
+    Build explicitly, from a seed (`FaultPlan.random` — same seed, same
+    schedule, forever), or from a CLI/launcher spec (`FaultPlan.parse`).
+    """
+
+    rules: tuple = ()
+    meta: dict = field(default_factory=dict, compare=False)
+
+    def __post_init__(self):
+        object.__setattr__(self, "rules", tuple(self.rules))
+        for r in self.rules:
+            if not isinstance(r, FaultRule):
+                raise TypeError(f"rules must be FaultRule, got {type(r)}")
+
+    @classmethod
+    def random(cls, seed: int, num_blocks: int, sites=None,
+               rate: float = 0.1, times: int = 1,
+               device_loss: tuple = ()) -> "FaultPlan":
+        """Draw a schedule once from ``seed``: each (site, block) faults
+        with probability ``rate`` on its first ``times`` calls.
+
+        Pre-drawing (instead of consulting an RNG at fire time) is what
+        makes chaos runs reproducible under free thread interleaving.
+        ``device_loss`` ordinals become ``mesh.device`` rules.
+        """
+        sites = tuple(_check_site(s) for s in (sites or RANDOM_SITES))
+        if not 0.0 <= rate <= 1.0:
+            raise ValueError(f"rate must be in [0, 1], got {rate}")
+        rng = random.Random(seed)
+        rules = []
+        for site in sites:
+            for idx in range(num_blocks):
+                if rng.random() < rate:
+                    rules.append(FaultRule(site, idx,
+                                           tuple(range(1, times + 1))))
+        for dev in device_loss:
+            rules.append(FaultRule("mesh.device", int(dev)))
+        return cls(tuple(rules), meta={
+            "seed": seed, "rate": rate, "sites": sites, "times": times,
+            "num_blocks": num_blocks, "device_loss": tuple(device_loss)})
+
+    @classmethod
+    def parse(cls, spec: str, num_blocks: int) -> "FaultPlan":
+        """Build a plan from a launcher spec string.
+
+        Two forms:
+          * ``"seed=7,rate=0.15,times=1,sites=blockstore.read+stream.decode,
+            lose=6+7"`` — a seeded random schedule (``sites`` are
+            ``+``-separated; ``lose`` lists device ordinals to drop);
+          * a JSON object (starts with ``{``) or ``@path`` to a JSON file:
+            ``{"rules": [{"site": ..., "index": ..., "calls": [1]}]}`` and/
+            or the random-plan keys ``{"seed", "rate", "sites", "times"}``.
+        """
+        spec = spec.strip()
+        if spec.startswith("@"):
+            spec = open(spec[1:]).read().strip()
+        if spec.startswith("{"):
+            doc = json.loads(spec)
+            rules = tuple(FaultRule(r["site"], r.get("index"),
+                                    tuple(r.get("calls", (1,))))
+                          for r in doc.get("rules", ()))
+            if "seed" in doc:
+                rnd = cls.random(int(doc["seed"]), num_blocks,
+                                 sites=doc.get("sites"),
+                                 rate=float(doc.get("rate", 0.1)),
+                                 times=int(doc.get("times", 1)),
+                                 device_loss=doc.get("device_loss", ()))
+                rules += rnd.rules
+            return cls(rules, meta={"spec": "json"})
+        kv = {}
+        for part in filter(None, (p.strip() for p in spec.split(","))):
+            if "=" not in part:
+                raise ValueError(
+                    f"bad --faults fragment {part!r}: expected key=value "
+                    f"pairs (seed=, rate=, times=, sites=a+b, lose=i+j)")
+            k, v = part.split("=", 1)
+            kv[k.strip()] = v.strip()
+        unknown = set(kv) - {"seed", "rate", "times", "sites", "lose"}
+        if unknown:
+            raise ValueError(f"unknown --faults keys {sorted(unknown)}")
+        return cls.random(
+            int(kv.get("seed", 0)), num_blocks,
+            sites=tuple(kv["sites"].split("+")) if "sites" in kv else None,
+            rate=float(kv.get("rate", 0.1)),
+            times=int(kv.get("times", 1)),
+            device_loss=tuple(int(d) for d in kv["lose"].split("+"))
+            if "lose" in kv else ())
+
+    def device_loss(self) -> tuple:
+        """Mesh device ordinals this plan marks lost."""
+        return tuple(r.index for r in self.rules
+                     if r.site == "mesh.device" and r.index is not None)
+
+
+class FaultInjector:
+    """Thread-safe executor of a `FaultPlan`.
+
+    Layers call ``fire(site, index)`` at their named site; the injector
+    counts the call per ``(site, index)`` and raises `InjectedFault` when
+    a rule schedules that call number. ``fired``/``calls`` expose exact
+    per-site telemetry for the chaos gate's budget assertions.
+    """
+
+    def __init__(self, plan: FaultPlan):
+        self.plan = plan
+        self._lock = threading.Lock()
+        self._calls: dict = {}     # (site, index) -> call count
+        self._fired: dict = {}     # site -> faults raised
+        # index rules by site for O(rules-at-site) matching
+        self._by_site: dict = {}
+        for r in plan.rules:
+            self._by_site.setdefault(r.site, []).append(r)
+
+    def fire(self, site: str, index: int | None = None) -> None:
+        """Count one pass of ``index`` through ``site``; raise if scheduled."""
+        _check_site(site)
+        with self._lock:
+            call_no = self._calls.get((site, index), 0) + 1
+            self._calls[(site, index)] = call_no
+            hit = any(
+                (r.index is None or r.index == index) and call_no in r.calls
+                for r in self._by_site.get(site, ()))
+            if hit:
+                self._fired[site] = self._fired.get(site, 0) + 1
+        if hit:
+            raise InjectedFault(
+                f"injected fault at {site} (block={index}, call={call_no})")
+
+    def fire_group(self, site: str, indices) -> None:
+        """Fire for every member of a coalesced batch: any scheduled member
+        fails the whole group (counted per member, so the schedule stays
+        deterministic however blocks happen to be grouped)."""
+        for i in indices:
+            self.fire(site, i)
+
+    def apply_device_loss(self, mesh) -> tuple:
+        """Mark this plan's ``mesh.device`` ordinals lost in `meshstate`.
+
+        Returns the device ids marked. Call once before (or mid-) job; the
+        planner's ``fallback="degrade"`` consults the registry.
+        """
+        ordinals = self.plan.device_loss()
+        if not ordinals:
+            return ()
+        from repro.core.resilience import meshstate
+        devices = list(mesh.devices.flat)
+        ids = tuple(devices[o].id for o in ordinals if o < len(devices))
+        meshstate.lose_devices(ids)
+        return ids
+
+    # ------------------------------------------------------------ telemetry
+    @property
+    def fired(self) -> dict:
+        with self._lock:
+            return dict(self._fired)
+
+    @property
+    def total_fired(self) -> int:
+        with self._lock:
+            return sum(self._fired.values())
+
+    def summary(self) -> dict:
+        with self._lock:
+            return {"rules": len(self.plan.rules),
+                    "fired_by_site": dict(self._fired),
+                    "total_fired": sum(self._fired.values())}
+
+
+def maybe_fire(injector, site: str, index: int | None = None) -> None:
+    """``injector.fire`` when an injector is wired, no-op otherwise — the
+    one-liner every instrumented layer calls so production paths stay
+    branch-cheap and injector-free by default."""
+    if injector is not None:
+        injector.fire(site, index)

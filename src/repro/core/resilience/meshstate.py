@@ -1,0 +1,94 @@
+"""Logical device-health registry: graceful mesh degradation.
+
+The distributed engines assume every mesh device answers its collectives;
+on a real fleet, chips get cordoned and hosts drop mid-job. JAX gives a
+single process no way to *actually* kill one of its own devices, so this
+module keeps the process-level fiction the rest of the resilience layer
+agrees on: a set of lost device ids plus an epoch counter. Simulated loss
+(`lose_devices`, or `FaultInjector.apply_device_loss` for scheduled
+chaos) bumps the epoch; `repro.fft.plan(..., fallback="degrade")` checks
+`mesh_healthy` before committing to a distributed strategy and re-plans
+on a shrunk mesh (`shrunk_mesh`) or mesh-free when devices are gone —
+instead of launching collectives that would hang a real cluster.
+"""
+
+from __future__ import annotations
+
+import threading
+
+from repro.core.resilience.events import record_event
+
+_LOCK = threading.Lock()
+_LOST: set = set()   # jax device ids considered dead
+_EPOCH = 0           # bumps on every loss/restore (cache-invalidation tag)
+
+
+def lose_devices(device_ids) -> None:
+    """Mark device ids lost (simulated datanode/chip failure)."""
+    global _EPOCH
+    ids = {int(d) for d in device_ids}
+    if not ids:
+        return
+    with _LOCK:
+        _LOST.update(ids)
+        _EPOCH += 1
+        epoch = _EPOCH
+    record_event("device_loss", device_ids=sorted(ids), epoch=epoch)
+
+
+def restore_devices(device_ids=None) -> None:
+    """Heal device ids (None = all) — test/benchmark teardown."""
+    global _EPOCH
+    with _LOCK:
+        if device_ids is None:
+            healed = sorted(_LOST)
+            _LOST.clear()
+        else:
+            healed = sorted(_LOST & {int(d) for d in device_ids})
+            _LOST.difference_update(healed)
+        if not healed:
+            return
+        _EPOCH += 1
+        epoch = _EPOCH
+    record_event("device_restore", device_ids=healed, epoch=epoch)
+
+
+def lost_devices() -> frozenset:
+    with _LOCK:
+        return frozenset(_LOST)
+
+
+def epoch() -> int:
+    """Monotonic health-change counter (plan-cache invalidation tag)."""
+    with _LOCK:
+        return _EPOCH
+
+
+def healthy_devices(mesh) -> list:
+    """The mesh's devices that are not marked lost, in mesh order."""
+    lost = lost_devices()
+    return [d for d in mesh.devices.flat if d.id not in lost]
+
+
+def mesh_healthy(mesh) -> bool:
+    """True when every device of ``mesh`` still answers."""
+    return len(healthy_devices(mesh)) == mesh.devices.size
+
+
+def shrunk_mesh(mesh):
+    """The largest power-of-two 1-D mesh of still-healthy devices, or None.
+
+    Degraded re-planning target: the distributed engines need a pow2
+    device count, and a 1-D mesh over the first axis name is the most
+    general shape every placement accepts. None when fewer than 2 healthy
+    devices remain (degrade goes mesh-free/local instead).
+    """
+    healthy = healthy_devices(mesh)
+    k = 1
+    while k * 2 <= len(healthy):
+        k *= 2
+    if k < 2:
+        return None
+    import numpy as np
+    from jax.sharding import Mesh
+    return Mesh(np.asarray(healthy[:k]), (mesh.axis_names[0],))

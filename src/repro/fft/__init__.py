@@ -29,7 +29,8 @@ are thin shims over this facade. Smoke-check with
 """
 
 from repro.fft.planner import (ExecutablePlan, cache_info, clear_plan_cache,
-                               fft2, ifft2, irfft2, plan, rfft2)
+                               fft2, ifft2, invalidate_mesh, irfft2, plan,
+                               rfft2)
 from repro.fft.spec import MAX_LOCAL_N, FftSpec, resolve_placement
 
 __all__ = [
@@ -40,6 +41,7 @@ __all__ = [
     "clear_plan_cache",
     "fft2",
     "ifft2",
+    "invalidate_mesh",
     "irfft2",
     "plan",
     "resolve_placement",

@@ -566,7 +566,7 @@ def plan(kind: str = "c2c", *, n: int | None = None, shape=None,
          interpret: bool | None = None, batch_tile: int | None = None,
          axes=None, natural_order: bool = True,
          fuse_twiddle: bool = False, overlap="auto",
-         r2c_axis: int = -1) -> ExecutablePlan:
+         r2c_axis: int = -1, fallback: str = "error") -> ExecutablePlan:
     """Resolve a transform spec and return the cached `ExecutablePlan`.
 
     Args:
@@ -604,14 +604,77 @@ def plan(kind: str = "c2c", *, n: int | None = None, shape=None,
       r2c_axis: which transform axis carries the real-to-complex halving;
         only the contiguous axis (-1) is supported — anything else is a
         plan-time ValueError (the packed-real reshape is only free there).
+      fallback: "error" (default) raises when the requested strategy can't
+        be built; "degrade" re-plans instead of raising when the mesh has
+        lost devices (core/resilience/meshstate.py) or the mesh-bound
+        strategy is unsatisfiable — first on the largest healthy pow2
+        sub-mesh, then mesh-free/local. Every downgrade drops the stale
+        mesh's cached plans (`invalidate_mesh`) and records a
+        "plan_downgrade" resilience event (DESIGN.md §10).
 
     Same resolved spec (and mesh) -> the SAME plan object, with its jit'd
     executables and twiddle tables already built.
     """
+    if fallback not in ("error", "degrade"):
+        raise ValueError(
+            f"fallback must be 'error' or 'degrade', got {fallback!r}")
     # resolve interpret-mode auto-detection BEFORE the spec is built, so
     # interpret=None and the equivalent explicit bool key the same plan
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
+
+    def _degrade(reason: str):
+        """Graceful-degradation chain: shrunk healthy mesh, then local.
+
+        Returns the downgraded plan, or None when every candidate fails
+        (the caller re-raises its own error). The stale mesh's cached
+        plans are dropped first — they capture collectives over devices
+        that no longer answer, so a later cache hit on the old key would
+        resurrect a hung strategy after the mesh heals its entry.
+        """
+        from repro.core.resilience import meshstate
+        from repro.core.resilience.events import record_event
+        dropped = invalidate_mesh(mesh)
+        sub = meshstate.shrunk_mesh(mesh)
+        candidates = []
+        if sub is not None:
+            candidates.append((sub, placement))
+            if placement not in ("auto", "local"):
+                candidates.append((sub, "auto"))
+        candidates.append((None, "local"))
+        for sub_mesh, sub_placement in candidates:
+            try:
+                p = plan(kind=kind, n=n, shape=shape,
+                         batch_shape=batch_shape, mesh=sub_mesh,
+                         placement=sub_placement, layout=layout, impl=impl,
+                         precision=precision, interpret=interpret,
+                         batch_tile=batch_tile, axes=None,
+                         natural_order=natural_order,
+                         fuse_twiddle=fuse_twiddle, overlap=overlap,
+                         r2c_axis=r2c_axis, fallback="error")
+            except (ValueError, NotImplementedError):
+                continue
+            record_event(
+                "plan_downgrade", reason=reason,
+                requested_placement=placement,
+                resolved_placement=p.placement,
+                from_devices=int(mesh.devices.size),
+                to_devices=(int(sub_mesh.devices.size)
+                            if sub_mesh is not None else 0),
+                epoch=meshstate.epoch(), plans_invalidated=dropped)
+            return p
+        return None
+
+    if fallback == "degrade" and mesh is not None:
+        from repro.core.resilience import meshstate
+        if not meshstate.mesh_healthy(mesh):
+            p = _degrade("mesh_degraded")
+            if p is not None:
+                return p
+            raise RuntimeError(
+                f"fallback='degrade': no viable plan for a mesh with "
+                f"{len(meshstate.healthy_devices(mesh))}/"
+                f"{mesh.devices.size} healthy devices")
 
     num_devices = None
     if mesh is not None:
@@ -629,12 +692,23 @@ def plan(kind: str = "c2c", *, n: int | None = None, shape=None,
     elif axes is not None:
         raise ValueError("axes= requires mesh=")
 
-    resolved = spec_mod.resolve(
-        kind=kind, n=n, shape=shape, batch_shape=batch_shape,
-        placement=placement, layout=layout, impl=impl, precision=precision,
-        interpret=interpret, batch_tile=batch_tile,
-        num_devices=num_devices, axes=axes, natural_order=natural_order,
-        fuse_twiddle=fuse_twiddle, overlap=overlap, r2c_axis=r2c_axis)
+    try:
+        resolved = spec_mod.resolve(
+            kind=kind, n=n, shape=shape, batch_shape=batch_shape,
+            placement=placement, layout=layout, impl=impl,
+            precision=precision, interpret=interpret, batch_tile=batch_tile,
+            num_devices=num_devices, axes=axes, natural_order=natural_order,
+            fuse_twiddle=fuse_twiddle, overlap=overlap, r2c_axis=r2c_axis)
+    except ValueError:
+        # mesh-bound strategy unsatisfiable (e.g. too few devices for the
+        # split): degrade walks the same chain instead of raising. A
+        # mesh-free failure is a genuine spec error — nothing to degrade
+        # to — so it always propagates.
+        if fallback == "degrade" and mesh is not None:
+            p = _degrade("resolve_failed")
+            if p is not None:
+                return p
+        raise
 
     # local plans don't touch the mesh -> key them mesh-free so the same
     # spec planned with and without a mesh unifies
@@ -713,6 +787,24 @@ def cache_info() -> dict:
     """Process-level plan-cache stats: {hits, misses, size}."""
     with _CACHE_LOCK:
         return {**_CACHE_INFO, "size": len(_PLAN_CACHE)}
+
+
+def invalidate_mesh(mesh) -> int:
+    """Drop every cached plan keyed on ``mesh``; returns how many.
+
+    Called by the degrade path when the mesh loses devices: the cached
+    plans' collectives span the dead devices, so serving them from the
+    cache would hand back a strategy that can never complete. Local plans
+    (keyed mesh-free) are untouched.
+    """
+    if mesh is None:
+        return 0
+    with _CACHE_LOCK:
+        stale = [k for k in _PLAN_CACHE
+                 if k[1] is not None and k[1] == mesh]
+        for k in stale:
+            del _PLAN_CACHE[k]
+    return len(stale)
 
 
 def clear_plan_cache() -> None:

@@ -136,6 +136,16 @@ def main(argv=None):
                     help="prefetch/decode threads (pipelined)")
     ap.add_argument("--writers", type=int, default=2,
                     help="writeback threads (pipelined)")
+    ap.add_argument("--replication", type=int, default=1,
+                    help="block replicas kept in the store")
+    ap.add_argument("--max-retries", type=int, default=3,
+                    help="per-block attempt budget")
+    ap.add_argument("--faults", default=None,
+                    help="deterministic fault schedule to replay "
+                         "(core/resilience/faults.py FaultPlan.parse spec: "
+                         "'seed=N,rate=R,sites=a+b', inline JSON, or "
+                         "@file.json) — the report then carries retry, "
+                         "repair, and injector stats")
     args = ap.parse_args(argv)
 
     work = Path(args.work_dir)
@@ -146,14 +156,24 @@ def main(argv=None):
     t0 = time.monotonic()
     sig = rng.standard_normal((n_seg, args.fft_len, 2)).astype(np.float32)
     store = BlockStore(work / "in", block_bytes=segment_block_bytes(
-        args.fft_len, args.segments_per_block))
+        args.fft_len, args.segments_per_block),
+        replication=args.replication)
     store.put_bytes(sig.tobytes())
     t_put = time.monotonic() - t0
+
+    # --- optional deterministic chaos replay ---
+    injector = None
+    if args.faults:
+        from repro.core.resilience import FaultInjector, FaultPlan
+        injector = FaultInjector(
+            FaultPlan.parse(args.faults, num_blocks=len(store.blocks)))
+        store.injector = injector
 
     # --- map-only FFT job ---
     cfg = JobConfig(workers=args.workers, readers=args.readers,
                     writers=args.writers, coalesce=args.coalesce,
-                    inflight=args.inflight)
+                    inflight=args.inflight, max_retries=args.max_retries,
+                    injector=injector)
     t0 = time.monotonic()
     job, stats, stage_s = run_job(store, work / "out", fft_len=args.fft_len,
                                   impl=args.impl, cfg=cfg,
@@ -199,6 +219,10 @@ def main(argv=None):
         "io_fraction": round(1 - p_frac, 3),
         "attempts": stats.attempts,
         "speculative": stats.speculative_launches,
+        "retries": stats.retries,
+        "failed_blocks": stats.failed_blocks,
+        "store": store.stats.as_dict(),
+        "faults": injector.summary() if injector is not None else None,
         "predicted_s_8_workers": round(model.predict(n, 1, 8), 3),
         "predicted_s_64_workers": round(model.predict(n, 8, 8), 3),
         "plan_cache": fft_api.cache_info(),

@@ -43,6 +43,16 @@ if [[ $# -eq 0 && -z "${REPRO_SKIP_FFT2_BENCH:-}" ]]; then
   python benchmarks/bench_fft2.py --quick
 fi
 
+# chaos gate: a fixed-seed fault schedule (>=3 injection sites, >=10% of
+# blocks) over the full pipelined job must leave the merged output
+# bitwise identical and within the retry budget, corrupted replicas must
+# be repaired, and simulated device loss must degrade to a working
+# re-plan (BENCH_chaos.json; exits nonzero on regression). The marked
+# chaos tests also run in the tier-1 pytest sweep below.
+if [[ $# -eq 0 && -z "${REPRO_SKIP_CHAOS_BENCH:-}" ]]; then
+  python benchmarks/bench_chaos.py --quick
+fi
+
 # --durations: the bench-gated suite keeps growing; keep the slowest
 # tests visible in CI logs so the ~45 min job budget (ci.yml
 # timeout-minutes) is spent knowingly, not discovered on timeout.

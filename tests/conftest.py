@@ -69,6 +69,13 @@ except ImportError:
     sys.modules["hypothesis.strategies"] = _hyp.strategies
 
 
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "chaos: seeded fault-injection runs over full pipelined jobs "
+        "(deterministic; gated in test.sh/CI alongside bench_chaos.py)")
+
+
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)

@@ -1,0 +1,191 @@
+"""Seeded chaos runs over full jobs (marked ``chaos``; gated in test.sh/CI
+next to benchmarks/bench_chaos.py).
+
+The acceptance property of the resilience layer: a deterministic fault
+schedule spanning several injection sites and a double-digit share of
+blocks changes a job's ATTEMPT counts, never its output bits. The
+schedules here are pure functions of their seeds — every failure in this
+file replays identically anywhere.
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.core.pipeline import (BlockStore, JobConfig, MapOnlyJob,
+                                 SegmentFFTTransform)
+from repro.core.pipeline.records import segment_block_bytes
+from repro.core.resilience import FaultInjector, FaultPlan, FaultRule
+
+pytestmark = pytest.mark.chaos
+
+FFT_LEN = 256
+SEGMENTS = 64          # 128 KB blocks
+BLOCKS = 8
+MAX_RETRIES = 8
+PIPELINE_SITES = ("blockstore.read", "blockstore.replica",
+                  "blockstore.write", "stream.decode", "stream.writeback")
+SERIAL_SITES = ("blockstore.read", "blockstore.replica",
+                "blockstore.write", "maponly.attempt")
+
+
+def _make_store(root, replication=2):
+    rng = np.random.default_rng(7)
+    sig = rng.standard_normal((BLOCKS * SEGMENTS, FFT_LEN, 2))
+    store = BlockStore(root, block_bytes=segment_block_bytes(
+        FFT_LEN, SEGMENTS), replication=replication)
+    store.put_bytes(sig.astype(np.float32).tobytes())
+    assert len(store.blocks) == BLOCKS
+    return store
+
+
+def _chaos_plan(sites, seed=1407, extra=()):
+    plan = FaultPlan.random(seed, BLOCKS, sites=sites, rate=0.25)
+    plan = FaultPlan(plan.rules + tuple(extra), meta=dict(plan.meta))
+    # the gate's preconditions: a real storm, not a token fault
+    assert len({r.site for r in plan.rules}) >= 3
+    assert len({r.index for r in plan.rules}) >= max(1, BLOCKS // 10)
+    return plan
+
+
+def _run(store, out_dir, injector, pipelined):
+    cfg = JobConfig(workers=2, readers=2, writers=2, coalesce=4, inflight=2,
+                    speculation=False, poll_interval_s=0.005,
+                    max_retries=MAX_RETRIES, injector=injector)
+    store.injector = injector
+    if pipelined:
+        job = MapOnlyJob(store, out_dir, config=cfg, pipelined=True,
+                         transform=SegmentFFTTransform(FFT_LEN, impl="ref"))
+    else:
+        job = MapOnlyJob(store, out_dir, lambda data, i: data, config=cfg)
+    stats = job.run()
+    merged = out_dir.parent / f"{out_dir.name}.bin"
+    job.merge(merged)
+    return stats, merged.read_bytes()
+
+
+def test_pipelined_chaos_bitwise_identical(tmp_path):
+    store = _make_store(tmp_path / "in")
+    _, clean = _run(store, tmp_path / "clean", None, pipelined=True)
+
+    store.corrupt_block(0, replica=0)  # physical rot on top of the plan
+    plan = _chaos_plan(PIPELINE_SITES,
+                       extra=(FaultRule("stream.launch", 2),
+                              FaultRule("stream.realize", 3)))
+    inj = FaultInjector(plan)
+    stats, chaotic = _run(store, tmp_path / "chaos", inj, pipelined=True)
+
+    assert chaotic == clean                      # not one bit different
+    assert inj.total_fired >= 3
+    assert stats.retries >= inj.total_fired - 1  # replica faults heal in-read
+    assert stats.attempts <= BLOCKS * MAX_RETRIES
+    assert not stats.failed_blocks
+    assert store.stats.fallback_reads >= 1 and store.stats.repairs >= 1
+
+
+def test_serial_chaos_bitwise_identical(tmp_path):
+    store = _make_store(tmp_path / "in")
+    _, clean = _run(store, tmp_path / "clean", None, pipelined=False)
+
+    inj = FaultInjector(_chaos_plan(SERIAL_SITES))
+    stats, chaotic = _run(store, tmp_path / "chaos", inj, pipelined=False)
+
+    assert chaotic == clean
+    assert inj.total_fired >= 3
+    assert stats.attempts <= BLOCKS * MAX_RETRIES
+    assert not stats.failed_blocks
+
+
+def test_chaos_schedule_replays_identically(tmp_path):
+    """Same seed -> the same faults fire and the same output emerges,
+    run after run (the no-flake property chaos testing depends on)."""
+    outs, fired = [], []
+    for run in range(2):
+        store = _make_store(tmp_path / f"in{run}")
+        inj = FaultInjector(_chaos_plan(PIPELINE_SITES))
+        _, data = _run(store, tmp_path / f"out{run}", inj, pipelined=True)
+        outs.append(data)
+        fired.append(inj.fired)
+    assert outs[0] == outs[1]
+    assert fired[0] == fired[1]
+
+
+def test_exhausted_budget_reports_failed_blocks(tmp_path):
+    """A block scheduled to fault on EVERY call must exhaust its budget
+    and surface as a structured failed_blocks record + chained cause."""
+    store = _make_store(tmp_path / "in")
+    inj = FaultInjector(FaultPlan((
+        FaultRule("stream.decode", 3, calls=tuple(range(1, 50))),)))
+    cfg = JobConfig(readers=2, writers=2, coalesce=4, inflight=2,
+                    speculation=False, poll_interval_s=0.005,
+                    max_retries=3, injector=inj)
+    job = MapOnlyJob(store, tmp_path / "out", config=cfg, pipelined=True,
+                     transform=SegmentFFTTransform(FFT_LEN, impl="ref"))
+    with pytest.raises(RuntimeError, match="block 3 failed 3 times") as ei:
+        job.run()
+    assert "injected fault at stream.decode" in repr(ei.value.__cause__)
+    assert job.stats.failed_blocks[0]["index"] == 3
+    assert job.stats.failed_blocks[0]["attempts"] == 3
+
+
+_DEGRADE_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import numpy as np, jax
+    from repro import compat
+    from repro.core.resilience import (FaultInjector, FaultPlan,
+                                       clear_events, events)
+    from repro.core.resilience import meshstate
+    import repro.fft as fft_api
+
+    mesh = compat.make_mesh((8,), ("x",))
+    n = 1 << 12
+    rng = np.random.default_rng(0)
+    xr = rng.standard_normal(n).astype(np.float32)
+    xi = rng.standard_normal(n).astype(np.float32)
+    want = np.fft.fft(xr + 1j * xi)
+
+    fft_api.plan(kind="c2c", n=n, mesh=mesh, placement="distributed")
+    inj = FaultInjector(FaultPlan.random(0, 0, rate=0.0, device_loss=(6, 7)))
+    clear_events()
+    inj.apply_device_loss(mesh)
+    p = fft_api.plan(kind="c2c", n=n, mesh=mesh, placement="distributed",
+                     fallback="degrade")
+    yr, yi = p.execute(xr, xi)
+    got = np.asarray(yr) + 1j * np.asarray(yi)
+    out = {
+        "placement": p.placement,
+        "devices": int(p.mesh.devices.size) if p.mesh is not None else 0,
+        "rel_err": float(np.abs(got - want).max() / np.abs(want).max()),
+        "events": [e["reason"] for e in events("plan_downgrade")],
+        "stale_keys": sum(1 for k in fft_api.planner._PLAN_CACHE
+                          if k[1] is not None
+                          and k[1].devices.size == 8),
+    }
+    meshstate.restore_devices()
+    print(json.dumps(out))
+""")
+
+
+def test_device_loss_degrades_to_shrunk_mesh(tmp_path):
+    """Losing 2/8 devices mid-session: fallback="degrade" must re-plan on
+    the 4-device healthy sub-mesh (not raise, not hang on dead devices),
+    stay numerically correct, log the downgrade, and invalidate the stale
+    8-device plan."""
+    env = {**os.environ, "PYTHONPATH": "src", "JAX_PLATFORMS": "cpu"}
+    proc = subprocess.run([sys.executable, "-c", _DEGRADE_SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=900,
+                          cwd=os.path.dirname(os.path.dirname(__file__)))
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    import json
+    out = json.loads(proc.stdout.strip().splitlines()[-1])
+    assert out["placement"] == "distributed"
+    assert out["devices"] == 4                 # largest healthy pow2
+    assert out["rel_err"] < 1e-4
+    assert out["events"] == ["mesh_degraded"]
+    assert out["stale_keys"] == 0

@@ -1,0 +1,361 @@
+"""Unit tests for the resilience layer (core/resilience, DESIGN.md §10):
+the shared RetryPolicy, deterministic FaultPlan/FaultInjector, the device
+health registry, replica repair, structured failure reporting, and the
+planner's graceful-degradation fallback."""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.core.pipeline import BlockStore, JobConfig, MapOnlyJob
+from repro.core.resilience import (FaultInjector, FaultPlan, FaultRule,
+                                   InjectedFault, RetryPolicy, clear_events,
+                                   events, record_event)
+from repro.core.resilience import meshstate
+import repro.fft as fft_api
+
+
+# ---------------------------------------------------------------- retry
+
+def test_retry_policy_attempt_budget():
+    p = RetryPolicy(max_attempts=3)
+    err = IOError("x")
+    assert p.should_retry(1, 0.0, err)
+    assert p.should_retry(2, 0.0, err)
+    assert not p.should_retry(3, 0.0, err)
+
+
+def test_retry_policy_non_retryable_fails_fast():
+    p = RetryPolicy(max_attempts=5, retryable=(IOError,))
+    assert not p.should_retry(1, 0.0, ValueError("nope"))
+    assert p.should_retry(1, 0.0, InjectedFault("io"))  # IOError subclass
+
+
+def test_retry_policy_deadline():
+    p = RetryPolicy(max_attempts=100, deadline_s=1.0)
+    err = IOError("x")
+    assert p.should_retry(1, 0.5, err)
+    assert not p.should_retry(1, 1.0, err)
+
+
+def test_retry_policy_default_is_immediate():
+    import random
+    p = RetryPolicy()
+    assert p.next_delay(0.0, random.Random(0)) == 0.0
+
+
+def test_retry_backoff_decorrelated_jitter_bounded_and_deterministic():
+    slept = []
+    p = RetryPolicy(max_attempts=10, base_delay_s=0.01, max_delay_s=0.5,
+                    sleep=slept.append, seed=42)
+    st = p.new_state()
+    for _ in range(6):
+        st.backoff()
+    assert all(0.01 <= d <= 0.5 for d in slept)
+    slept2 = []
+    p2 = RetryPolicy(max_attempts=10, base_delay_s=0.01, max_delay_s=0.5,
+                     sleep=slept2.append, seed=42)
+    st2 = p2.new_state()
+    for _ in range(6):
+        st2.backoff()
+    assert slept == slept2  # same seed, same jitter chain
+
+
+def test_retry_call_succeeds_within_budget():
+    p = RetryPolicy(max_attempts=3, retryable=(IOError,))
+    seen = []
+
+    def fn(attempt):
+        seen.append(attempt)
+        if attempt < 2:
+            raise IOError("flaky")
+        return "ok"
+
+    assert p.call(fn) == "ok"
+    assert seen == [0, 1, 2]
+
+
+def test_retry_call_raises_after_budget():
+    p = RetryPolicy(max_attempts=2, retryable=(IOError,))
+    with pytest.raises(IOError, match="always"):
+        p.call(lambda a: (_ for _ in ()).throw(IOError("always")))
+
+
+def test_retry_call_injected_clock_enforces_deadline():
+    t = [0.0]
+
+    def clock():
+        t[0] += 10.0
+        return t[0]
+
+    p = RetryPolicy(max_attempts=100, deadline_s=5.0, clock=clock,
+                    retryable=(IOError,))
+    calls = []
+
+    def fn(attempt):
+        calls.append(attempt)
+        raise IOError("slow")
+
+    with pytest.raises(IOError):
+        p.call(fn)
+    assert len(calls) == 1  # deadline spent before a second attempt
+
+
+def test_retry_policy_validation():
+    with pytest.raises(ValueError):
+        RetryPolicy(max_attempts=0)
+    with pytest.raises(ValueError):
+        RetryPolicy(base_delay_s=-1.0)
+
+
+# ---------------------------------------------------------------- faults
+
+def test_fault_rule_validation():
+    with pytest.raises(ValueError, match="unknown fault site"):
+        FaultRule("nope.site", 0)
+    with pytest.raises(ValueError, match="1-based"):
+        FaultRule("blockstore.read", 0, calls=(0,))
+
+
+def test_fault_plan_random_is_seed_deterministic():
+    a = FaultPlan.random(seed=9, num_blocks=32, rate=0.2)
+    b = FaultPlan.random(seed=9, num_blocks=32, rate=0.2)
+    assert a.rules == b.rules
+    assert FaultPlan.random(seed=10, num_blocks=32, rate=0.2).rules != a.rules
+    assert FaultPlan.random(seed=9, num_blocks=32, rate=0.0).rules == ()
+
+
+def test_fault_plan_parse_kv_and_json(tmp_path):
+    p = FaultPlan.parse("seed=3,rate=0.5,sites=blockstore.read,lose=6+7",
+                        num_blocks=8)
+    assert all(r.site in ("blockstore.read", "mesh.device") for r in p.rules)
+    assert p.device_loss() == (6, 7)
+
+    doc = {"rules": [{"site": "stream.decode", "index": 1, "calls": [1, 2]}]}
+    p2 = FaultPlan.parse(json.dumps(doc), num_blocks=8)
+    assert p2.rules == (FaultRule("stream.decode", 1, (1, 2)),)
+
+    f = tmp_path / "faults.json"
+    f.write_text(json.dumps(doc))
+    assert FaultPlan.parse(f"@{f}", num_blocks=8).rules == p2.rules
+
+    with pytest.raises(ValueError, match="unknown --faults keys"):
+        FaultPlan.parse("sed=3", num_blocks=8)
+
+
+def test_injector_fires_on_scheduled_call_only():
+    inj = FaultInjector(FaultPlan((
+        FaultRule("blockstore.read", 2, calls=(2,)),)))
+    inj.fire("blockstore.read", 2)          # call 1: pass
+    with pytest.raises(InjectedFault, match=r"block=2, call=2"):
+        inj.fire("blockstore.read", 2)      # call 2: scheduled
+    inj.fire("blockstore.read", 2)          # call 3: pass again
+    inj.fire("blockstore.read", 1)          # other block: never
+    assert inj.fired == {"blockstore.read": 1}
+    assert inj.summary()["total_fired"] == 1
+
+
+def test_injector_fire_group_counts_per_member():
+    inj = FaultInjector(FaultPlan((FaultRule("stream.launch", 1),)))
+    with pytest.raises(InjectedFault):
+        inj.fire_group("stream.launch", [0, 1, 2])
+    # block 0 was counted before the hit on 1; replaying the group now
+    # passes (everyone's call 1 is spent or unscheduled)
+    inj.fire_group("stream.launch", [2, 0, 1])
+
+
+# ------------------------------------------------------------- meshstate
+
+def test_meshstate_loss_epoch_and_shrink():
+    import jax
+    from repro import compat
+
+    meshstate.restore_devices()
+    mesh = compat.make_mesh((len(jax.devices()),), ("x",))
+    assert meshstate.mesh_healthy(mesh)
+    e0 = meshstate.epoch()
+
+    clear_events()
+    dev_id = mesh.devices.flat[0].id
+    meshstate.lose_devices([dev_id])
+    try:
+        assert not meshstate.mesh_healthy(mesh)
+        assert meshstate.epoch() == e0 + 1
+        assert dev_id in meshstate.lost_devices()
+        assert len(meshstate.healthy_devices(mesh)) == mesh.devices.size - 1
+        # < 2 healthy devices on a 1-device host: no shrunk mesh
+        if mesh.devices.size == 1:
+            assert meshstate.shrunk_mesh(mesh) is None
+        assert [e["kind"] for e in events("device_loss")] == ["device_loss"]
+    finally:
+        meshstate.restore_devices()
+    assert meshstate.mesh_healthy(mesh)
+    assert meshstate.epoch() == e0 + 2
+
+
+def test_resilience_event_log():
+    clear_events()
+    record_event("plan_downgrade", reason="test", epoch=1)
+    record_event("device_loss", device_ids=[0])
+    assert len(events()) == 2
+    only = events("plan_downgrade")
+    assert only[0]["reason"] == "test" and "t" in only[0]
+    clear_events()
+    assert events() == []
+
+
+# ------------------------------------------------- blockstore repair
+
+def _store(tmp_path, replication=2, blocks=3):
+    store = BlockStore(tmp_path / "in", block_bytes=1 << 10,
+                       replication=replication)
+    rng = np.random.default_rng(0)
+    store.put_bytes(rng.bytes(blocks << 10))
+    return store
+
+
+def test_read_fallback_repairs_primary(tmp_path):
+    store = _store(tmp_path)
+    good = store.read_block(1)
+    store.corrupt_block(1, replica=0)
+    assert store.read_block(1) == good  # served from replica 1
+    assert store.stats.fallback_reads == 1
+    assert store.stats.repairs == 1
+    # the primary was atomically rewritten: next read is clean again
+    assert store.read_block(1) == good
+    assert store.stats.fallback_reads == 1  # no second fallback
+
+
+def test_repair_block_rewrites_missing_and_corrupt_copies(tmp_path):
+    store = _store(tmp_path)
+    info = store.blocks[0]
+    store.corrupt_block(0, replica=0)
+    (store.root / info.name(1)).unlink()  # replica missing entirely
+    with pytest.raises(IOError, match="no intact replica"):
+        store.repair_block(0)
+    data = _store(tmp_path / "twin").read_block(0)  # same seed, same bytes
+    assert store.repair_block(0, data) == 2
+    assert store.repair_block(0) == 0  # idempotent: all healthy now
+    assert store.stats.repairs == 2
+
+
+def test_repair_block_refuses_bad_source(tmp_path):
+    store = _store(tmp_path)
+    with pytest.raises(ValueError, match="refusing to propagate"):
+        store.repair_block(0, b"not the block")
+
+
+def test_read_block_all_replicas_failed_chains_cause(tmp_path):
+    store = _store(tmp_path)
+    store.corrupt_block(2, replica=0)
+    store.corrupt_block(2, replica=1)
+    with pytest.raises(IOError, match="all replicas failed") as ei:
+        store.read_block(2)
+    assert isinstance(ei.value.__cause__, IOError)
+
+
+def test_injected_read_fault_consumes_one_replica_attempt(tmp_path):
+    store = _store(tmp_path)
+    good = store.read_block(0)
+    store.injector = FaultInjector(FaultPlan((
+        FaultRule("blockstore.replica", 0),)))
+    assert store.read_block(0) == good  # primary faulted -> replica served
+    assert store.stats.fallback_reads == 1
+
+
+# ------------------------------------------ job failure reporting
+
+def test_serial_job_failure_is_structured_and_chained(tmp_path):
+    store = _store(tmp_path, replication=1)
+
+    def poisoned(data, idx):
+        if idx == 1:
+            raise RuntimeError("bad segment")
+        return data
+
+    job = MapOnlyJob(store, tmp_path / "out", poisoned,
+                     config=JobConfig(workers=2, max_retries=3,
+                                      speculation=False))
+    with pytest.raises(RuntimeError, match="block 1 failed 3 times") as ei:
+        job.run()
+    assert "bad segment" in repr(ei.value.__cause__)
+    assert job.stats.failed_blocks == [
+        {"index": 1, "attempts": 3, "error": repr(ei.value.__cause__)}]
+
+
+def test_job_custom_retry_policy_caps_attempts(tmp_path):
+    store = _store(tmp_path, replication=1)
+    cfg = JobConfig(workers=1, speculation=False,
+                    retry=RetryPolicy(max_attempts=1))
+
+    def always_fail(data, idx):
+        raise IOError("down")
+
+    job = MapOnlyJob(store, tmp_path / "out", always_fail, config=cfg)
+    with pytest.raises(RuntimeError, match="failed 1 times"):
+        job.run()
+    assert job.stats.retries == 0
+
+
+# ----------------------------------------------- planner degradation
+
+def test_plan_fallback_validation():
+    with pytest.raises(ValueError, match="fallback"):
+        fft_api.plan(kind="c2c", n=64, fallback="maybe")
+
+
+def test_plan_degrade_falls_back_to_local_on_dead_mesh():
+    import jax
+    from repro import compat
+
+    meshstate.restore_devices()
+    fft_api.clear_plan_cache()
+    mesh = compat.make_mesh((len(jax.devices()),), ("x",))
+    # segmented needs the batch to shard evenly across the mesh, so scale
+    # it with the device count (1 direct, 8 under test.sh's XLA_FLAGS)
+    batch = 4 * mesh.devices.size
+    # a cached mesh-bound plan that must be invalidated on degrade
+    fft_api.plan(kind="c2c", n=256, batch_shape=(batch,), mesh=mesh,
+                 placement="segmented")
+    assert fft_api.cache_info()["size"] == 1
+
+    clear_events()
+    meshstate.lose_devices([d.id for d in mesh.devices.flat])
+    try:
+        p = fft_api.plan(kind="c2c", n=256, batch_shape=(batch,), mesh=mesh,
+                         placement="segmented", fallback="degrade")
+    finally:
+        meshstate.restore_devices()
+    assert p.placement == "local" and p.mesh is None
+    ev = events("plan_downgrade")
+    assert len(ev) == 1
+    assert ev[0]["requested_placement"] == "segmented"
+    assert ev[0]["resolved_placement"] == "local"
+    assert ev[0]["plans_invalidated"] == 1
+    # the stale mesh-bound plan is gone from the cache
+    assert all(k[1] is None for k in fft_api.planner._PLAN_CACHE)
+
+    # the degraded local plan still computes the right spectrum
+    rng = np.random.default_rng(0)
+    xr = rng.standard_normal((batch, 256)).astype(np.float32)
+    xi = rng.standard_normal((batch, 256)).astype(np.float32)
+    yr, yi = p.execute(xr, xi)
+    want = np.fft.fft(xr + 1j * xi)
+    err = np.abs((np.asarray(yr) + 1j * np.asarray(yi)) - want).max()
+    assert err / np.abs(want).max() < 5e-6
+
+
+def test_invalidate_mesh_only_drops_that_mesh(tmp_path):
+    import jax
+    from repro import compat
+
+    fft_api.clear_plan_cache()
+    mesh = compat.make_mesh((len(jax.devices()),), ("x",))
+    fft_api.plan(kind="c2c", n=128)  # local, mesh-free key
+    fft_api.plan(kind="c2c", n=256, batch_shape=(4 * mesh.devices.size,),
+                 mesh=mesh, placement="segmented")
+    assert fft_api.cache_info()["size"] == 2
+    assert fft_api.invalidate_mesh(mesh) == 1
+    assert fft_api.cache_info()["size"] == 1
+    assert fft_api.invalidate_mesh(None) == 0

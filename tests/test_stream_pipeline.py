@@ -402,3 +402,48 @@ def test_manifest_reads_legacy_format(tmp_path):
     m = Manifest(path, num_blocks=3)
     assert m.tasks[1].status == "DONE"
     assert m.tasks[0].status == "PENDING"
+
+
+def test_manifest_crash_mid_compact_replays_same_states(
+        tmp_path, monkeypatch):
+    """A crash inside _compact (power cut between tmp-write and rename)
+    must leave the journal byte-identical, so a reopen replays the SAME
+    task states — and must not leak the tmp snapshot file."""
+    import os as _os
+
+    path = tmp_path / "j.json"
+    m = Manifest(path, num_blocks=4)
+    m.update(0, status="DONE", finished_at=1.0)
+    m.update(1, status="RUNNING", started_at=2.0)
+    m.update(3, status="FAILED", attempts=3, error="boom")
+    m.close()
+    with open(path, "a") as f:  # plus a torn tail from the same crash
+        f.write('{"type": "update", "index": 2, "fie')
+    journal_before = path.read_bytes()
+
+    real_replace = _os.replace
+
+    def crash_replace(src, dst):
+        raise OSError("simulated crash mid-compact")
+
+    monkeypatch.setattr("repro.core.pipeline.maponly.os.replace",
+                        crash_replace)
+    with pytest.raises(OSError, match="mid-compact"):
+        Manifest(path, num_blocks=4)
+    monkeypatch.setattr("repro.core.pipeline.maponly.os.replace",
+                        real_replace)
+
+    # the journal is untouched and no .mtmp_ snapshot leaked
+    assert path.read_bytes() == journal_before
+    assert not list(tmp_path.glob(".mtmp_*"))
+
+    m2 = Manifest(path, num_blocks=4)
+    assert m2.tasks[0].status == "DONE"
+    assert m2.tasks[1].status == "PENDING"  # RUNNING at crash -> retry
+    assert m2.tasks[2].status == "PENDING"  # torn record dropped
+    assert m2.tasks[3].status == "FAILED"
+    assert m2.tasks[3].error == "boom"
+    # and the successful reopen compacted back to one snapshot line
+    assert len(path.read_text().splitlines()) == 1
+    m2.update(2, status="DONE")  # journal usable after recovery
+    assert Manifest(path, num_blocks=4).tasks[2].status == "DONE"
