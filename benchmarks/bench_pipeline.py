@@ -54,7 +54,8 @@ import time
 from pathlib import Path
 
 from benchmarks.common import make_signal_store
-from repro.core.pipeline import BlockStore, JobConfig
+from repro.core.pipeline import JobConfig
+from repro.core.pipeline.testing import DISK_MB_S, ThrottledStore
 from repro.launch.fft_job import run_job
 import repro.fft as fft_api
 
@@ -85,23 +86,8 @@ SEGMENTS_PER_BLOCK = 512  # 4 MB blocks
 COALESCE = 4
 INFLIGHT = 3
 IMPL = "ref"
-DISK_MB_S = 250  # modeled per-spindle disk bandwidth (see module docstring)
-
-
-class ThrottledStore(BlockStore):
-    """Benchmark-only store modeling paper-era disk latency: every block
-    read/write sleeps nbytes/DISK_MB_S on top of the tmpfs access. The
-    sleep releases the GIL, so it is hideable by overlap — exactly like
-    real disk waits — and deterministic across runs and runners."""
-
-    def read_block(self, index: int, verify: bool = True) -> bytes:
-        data = super().read_block(index, verify)
-        time.sleep(len(data) / (DISK_MB_S * (1 << 20)))
-        return data
-
-    def write_output_block(self, out_dir, index: int, data) -> None:
-        time.sleep(len(data) / (DISK_MB_S * (1 << 20)))
-        super().write_output_block(out_dir, index, data)
+# ThrottledStore / DISK_MB_S: the shared deterministic disk model
+# (repro/core/pipeline/testing.py) — same 250 MB/s spindle as before.
 
 MODES = {
     # speculation off for stable timing; it is covered by the test suite

@@ -13,9 +13,9 @@ import sys
 import traceback
 
 from benchmarks import (bench_chaos, bench_distributed, bench_fft,
-                        bench_fft2, bench_pipeline, fig2_total_time,
-                        fig3_fft_time, fig45_io_fraction, fig6_scaling,
-                        roofline)
+                        bench_fft2, bench_outofcore, bench_pipeline,
+                        fig2_total_time, fig3_fft_time, fig45_io_fraction,
+                        fig6_scaling, roofline)
 
 MODULES = {
     "fig2": fig2_total_time,
@@ -27,6 +27,7 @@ MODULES = {
     "pipeline": bench_pipeline,
     "distributed": bench_distributed,
     "chaos": bench_chaos,
+    "outofcore": bench_outofcore,
     "roofline": roofline,
 }
 

@@ -1,11 +1,12 @@
-from repro.core.pipeline.blockstore import BlockStore, StoreStats
+from repro.core.pipeline.blockstore import (BlockIntegrityError, BlockStore,
+                                            StoreStats)
 from repro.core.pipeline.maponly import MapOnlyJob, JobConfig, JobStats
 from repro.core.pipeline.records import segments_of_block, block_of_segments
 from repro.core.pipeline.stream import (MapFnTransform, SegmentFFTTransform,
                                         StagingPool, StreamExecutor,
                                         StreamTransform)
 
-__all__ = ["BlockStore", "MapOnlyJob", "JobConfig", "JobStats",
-           "segments_of_block", "block_of_segments", "StoreStats",
+__all__ = ["BlockIntegrityError", "BlockStore", "MapOnlyJob", "JobConfig",
+           "JobStats", "segments_of_block", "block_of_segments", "StoreStats",
            "StreamExecutor", "StreamTransform", "SegmentFFTTransform",
            "MapFnTransform", "StagingPool"]

@@ -45,6 +45,21 @@ MANIFEST = "manifest.json"
 MERGE_CHUNK = 4 << 20  # getmerge streams block files in bounded chunks
 
 
+class BlockIntegrityError(IOError):
+    """A block-granular integrity failure (checksum mismatch, missing or
+    unreadable block), carrying WHICH block: ``index`` (store block index,
+    when known) and ``block`` (the offending file name). Subclasses
+    ``IOError`` so every retry policy and replica loop still classifies it
+    as retryable I/O; raisers chain the underlying error (``from err``,
+    the PR-6 convention) so the root cause stays on the traceback."""
+
+    def __init__(self, msg: str, *, index: int | None = None,
+                 block: str | None = None):
+        super().__init__(msg)
+        self.index = index
+        self.block = block
+
+
 def _sha(data) -> str:
     return hashlib.sha256(data).hexdigest()[:16]
 
@@ -147,15 +162,27 @@ class BlockStore:
 
     def put_file(self, path: os.PathLike) -> None:
         """Streaming ingest: split a file into blocks reading one block at
-        a time, so copy-in never holds the whole input in memory."""
+        a time, so copy-in never holds the whole input in memory. A
+        mid-stream read or write failure surfaces as a structured
+        `BlockIntegrityError` naming the block being ingested (chained
+        ``from`` the underlying OS error)."""
         self.blocks = []
         self.total_bytes = 0
         with open(path, "rb") as f:
             while True:
-                chunk = f.read(self.block_bytes)
-                if not chunk:
-                    break
-                self._append_block(self.total_bytes, chunk)
+                index = len(self.blocks)
+                try:
+                    chunk = f.read(self.block_bytes)
+                    if not chunk:
+                        break
+                    self._append_block(self.total_bytes, chunk)
+                except OSError as err:
+                    raise BlockIntegrityError(
+                        f"put_file: ingest of block {index} (offset "
+                        f"{self.total_bytes}) from {path} failed",
+                        index=index,
+                        block=f"block_{self.total_bytes:016d}.bin",
+                    ) from err
                 self.total_bytes += len(chunk)
         self._save_manifest()
 
@@ -209,13 +236,17 @@ class BlockStore:
             # is about to become the new source of truth, so it must
             # match the cryptographic checksum before being served
             if verify and not self._verify(data, info, deep=r > 0):
-                raise IOError(f"checksum mismatch on {path.name}")
+                raise BlockIntegrityError(
+                    f"checksum mismatch on {path.name}",
+                    index=index, block=path.name)
             return r, data
 
         try:
             r, data = self._replica_policy().call(attempt)
         except (IOError, OSError) as e:  # every replica missing or corrupt
-            raise IOError(f"block {index}: all replicas failed") from e
+            raise BlockIntegrityError(
+                f"block {index}: all replicas failed",
+                index=index, block=info.name()) from e
         if r > 0:
             # served from a fallback replica: the primary (and any earlier
             # copy) is broken — repair it now from the verified data, or
@@ -288,16 +319,27 @@ class BlockStore:
         expect = [b.name() for b in self.blocks]
         if names != expect:
             missing = sorted(set(expect) - set(names))
-            raise IOError(f"getmerge: missing {len(missing)} output blocks: "
-                          f"{missing[:3]}...")
+            first = missing[0] if missing else names[0]
+            raise BlockIntegrityError(
+                f"getmerge: missing {len(missing)} output blocks "
+                f"(first: {first})",
+                index=expect.index(first) if first in expect else None,
+                block=first)
         total = 0
         with open(dest, "wb") as f:
-            for name in names:  # lexicographic == offset order (zero-padded)
-                with open(out / name, "rb") as src:  # bounded-memory stream
-                    while True:
-                        chunk = src.read(MERGE_CHUNK)
-                        if not chunk:
-                            break
-                        f.write(chunk)
-                        total += len(chunk)
+            for i, name in enumerate(names):  # lexicographic == offset order
+                try:
+                    with open(out / name, "rb") as src:  # bounded stream
+                        while True:
+                            chunk = src.read(MERGE_CHUNK)
+                            if not chunk:
+                                break
+                            f.write(chunk)
+                            total += len(chunk)
+                except OSError as err:
+                    # a block that listed but fails mid-stream (vanished,
+                    # truncated device, I/O error): name it, chain it
+                    raise BlockIntegrityError(
+                        f"getmerge: output block {name} (index {i}) "
+                        f"failed mid-stream", index=i, block=name) from err
         return total

@@ -31,6 +31,10 @@ Injection sites (each threaded through its owning layer):
                       ordinal to mark lost in `meshstate` (consumed by
                       `FaultInjector.apply_device_loss`; the planner's
                       ``fallback="degrade"`` re-plans around it)
+  ooc.shuffle         out-of-core pass-1 transposed-shuffle tile write
+                      (core/fft/outofcore.py; index = r*C + c tile id)
+  ooc.pass2           out-of-core pass-2 tile read/assemble (index =
+                      r*C + c tile id)
   ==================  =====================================================
 
 All raising sites throw `InjectedFault` (an ``IOError`` subclass, so the
@@ -54,6 +58,11 @@ SITES = (
     "stream.writeback",
     "maponly.attempt",
     "mesh.device",
+    # appended AFTER the original nine so seeded FaultPlan.random draws
+    # for the pre-existing sites replay identically (same seed, same
+    # schedule — the chaos gate's fixed-seed runs stay byte-stable)
+    "ooc.shuffle",
+    "ooc.pass2",
 )
 
 # sites a seeded random plan draws from by default: the raising, per-block

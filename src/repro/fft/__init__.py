@@ -21,13 +21,18 @@ Placements scale the same call from one core to the full mesh:
 "local" (level-0/1 kernels), "segmented" (the paper's map-only regime,
 zero collectives), "distributed" (1-D cross-device four-step over three
 exchanges; 2-D pencil decomposition over ONE exchange); "auto" picks from
-shape, batch_shape, and mesh size.
+shape, batch_shape, and mesh size. "out_of_core" streams a single huge
+1-D c2c whose operand lives in a `BlockStore` through the two-pass
+four-step under a host memory budget (``plan(..., store=, work_dir=,
+budget_bytes=)`` -> `core.fft.outofcore.OutOfCorePlan`).
 
 The deprecated per-call entry points (`repro.kernels.fft.ops.fft` etc.)
 are thin shims over this facade. Smoke-check with
 ``python -m repro.fft.selftest``.
 """
 
+from repro.core.fft.outofcore import (OocPlan, OutOfCorePlan,
+                                      factor_out_of_core)
 from repro.fft.planner import (ExecutablePlan, cache_info, clear_plan_cache,
                                fft2, ifft2, invalidate_mesh, irfft2, plan,
                                rfft2)
@@ -37,8 +42,11 @@ __all__ = [
     "ExecutablePlan",
     "FftSpec",
     "MAX_LOCAL_N",
+    "OocPlan",
+    "OutOfCorePlan",
     "cache_info",
     "clear_plan_cache",
+    "factor_out_of_core",
     "fft2",
     "ifft2",
     "invalidate_mesh",

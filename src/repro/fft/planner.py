@@ -39,7 +39,7 @@ from repro.kernels.fft import plan as kplan
 _F32 = 4  # bytes per planar float32 element
 
 _PLAN_CACHE: dict = {}
-_CACHE_INFO = {"hits": 0, "misses": 0}
+_CACHE_INFO = {"hits": 0, "misses": 0, "invalidations": 0}
 # map-only jobs plan() from ThreadPoolExecutor workers (core/pipeline):
 # the check-then-act on the cache must be atomic or the first same-shaped
 # blocks each build (and later compile) their own plan
@@ -566,7 +566,9 @@ def plan(kind: str = "c2c", *, n: int | None = None, shape=None,
          interpret: bool | None = None, batch_tile: int | None = None,
          axes=None, natural_order: bool = True,
          fuse_twiddle: bool = False, overlap="auto",
-         r2c_axis: int = -1, fallback: str = "error") -> ExecutablePlan:
+         r2c_axis: int = -1, fallback: str = "error",
+         store=None, work_dir=None, budget_bytes: int | None = None,
+         job_config=None):
     """Resolve a transform spec and return the cached `ExecutablePlan`.
 
     Args:
@@ -618,6 +620,50 @@ def plan(kind: str = "c2c", *, n: int | None = None, shape=None,
     if fallback not in ("error", "degrade"):
         raise ValueError(
             f"fallback must be 'error' or 'degrade', got {fallback!r}")
+
+    if placement == "out_of_core":
+        # the operand lives in a BlockStore and the plan carries live
+        # store/manifest state, so it is built here directly (never
+        # process-cached) — the per-pass FFTs it launches are the cached
+        # ExecutablePlans, which is where the reuse actually matters
+        if kind != "c2c":
+            raise ValueError(
+                "placement='out_of_core' streams the four-step c2c "
+                "decomposition; run real captures as packed c2c")
+        if shape is not None:
+            shape_t = (shape,) if isinstance(shape, int) else tuple(shape)
+            if n is not None or len(shape_t) != 1:
+                raise ValueError(
+                    f"placement='out_of_core' transforms ONE 1-D signal; "
+                    f"pass n= (or a 1-tuple shape), got shape={shape}")
+            n = int(shape_t[0])
+        if n is None:
+            raise ValueError("placement='out_of_core' requires n=")
+        if batch_shape not in ((), None):
+            raise ValueError(
+                f"placement='out_of_core' takes no batch_shape, got "
+                f"{batch_shape}; the panel batching is internal")
+        if mesh is not None:
+            raise ValueError(
+                "placement='out_of_core' streams through storage on one "
+                "host; it takes no mesh=")
+        if impl not in spec_mod.IMPLS:
+            raise ValueError(
+                f"unknown fft impl {impl!r}; expected one of "
+                f"{spec_mod.IMPLS}")
+        if store is None or work_dir is None or budget_bytes is None:
+            raise ValueError(
+                "placement='out_of_core' requires store= (the BlockStore "
+                "holding the operand), work_dir= (tiles/manifests/output), "
+                "and budget_bytes= (the host working-set cap)")
+        from repro.core.fft.outofcore import plan_out_of_core
+        return plan_out_of_core(int(n), store, work_dir, int(budget_bytes),
+                                impl=impl, config=job_config)
+    if store is not None or work_dir is not None or budget_bytes is not None:
+        raise ValueError(
+            "store=/work_dir=/budget_bytes= apply only to "
+            "placement='out_of_core'")
+
     # resolve interpret-mode auto-detection BEFORE the spec is built, so
     # interpret=None and the equivalent explicit bool key the same plan
     if interpret is None:
@@ -784,9 +830,19 @@ def irfft2(yr, yi, shape=None, **kw):
 
 
 def cache_info() -> dict:
-    """Process-level plan-cache stats: {hits, misses, size}."""
+    """Process-level plan-cache stats:
+    {entries, hits, misses, invalidations, size}.
+
+    ``entries`` is the live plan count (``size`` kept as its legacy
+    alias); ``invalidations`` counts plans dropped by `invalidate_mesh` /
+    `clear_plan_cache` over the process lifetime. Workloads that churn
+    the cache across phases (the out-of-core job's two pass lengths, the
+    degrade path's mesh drops) report this dict — launch/fft_job.py
+    carries it in every run report.
+    """
     with _CACHE_LOCK:
-        return {**_CACHE_INFO, "size": len(_PLAN_CACHE)}
+        return {**_CACHE_INFO, "entries": len(_PLAN_CACHE),
+                "size": len(_PLAN_CACHE)}
 
 
 def invalidate_mesh(mesh) -> int:
@@ -804,12 +860,15 @@ def invalidate_mesh(mesh) -> int:
                  if k[1] is not None and k[1] == mesh]
         for k in stale:
             del _PLAN_CACHE[k]
+        _CACHE_INFO["invalidations"] += len(stale)
     return len(stale)
 
 
 def clear_plan_cache() -> None:
-    """Drop every cached plan (tests/benchmarks; compiled fns are freed)."""
+    """Drop every cached plan (tests/benchmarks; compiled fns are freed)
+    and reset the cache counters."""
     with _CACHE_LOCK:
         _PLAN_CACHE.clear()
         _CACHE_INFO["hits"] = 0
         _CACHE_INFO["misses"] = 0
+        _CACHE_INFO["invalidations"] = 0

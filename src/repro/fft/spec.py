@@ -42,7 +42,7 @@ from dataclasses import dataclass, replace
 from repro.kernels.fft import plan as kplan
 
 KINDS = ("c2c", "r2c")
-PLACEMENTS = ("auto", "local", "segmented", "distributed")
+PLACEMENTS = ("auto", "local", "segmented", "distributed", "out_of_core")
 LAYOUTS = ("zero_copy", "copy")
 IMPLS = ("matfft", "stockham", "ref")
 PRECISIONS = ("f32",)  # reserved: bf16/f64 variants are future work
@@ -230,6 +230,15 @@ def resolve(kind: str, n=None, batch_shape=(), placement: str = "auto",
     if precision not in PRECISIONS:
         raise ValueError(
             f"unsupported precision {precision!r}; supported: {PRECISIONS}")
+    if placement == "out_of_core":
+        # out-of-core plans bind to live store/directory state, so they
+        # are built (and NOT process-cached) by `repro.fft.plan` itself —
+        # there is no frozen mesh spec to resolve here
+        raise ValueError(
+            "placement='out_of_core' is constructed by repro.fft.plan("
+            "store=..., work_dir=..., budget_bytes=...) and has no "
+            "resolvable FftSpec (the plan is bound to a BlockStore, "
+            "not a mesh)")
     shape = _normalize_shape(n, shape)
     ndim = len(shape)
     if kind == "r2c":

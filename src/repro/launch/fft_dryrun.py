@@ -21,6 +21,11 @@ costs are exact — no scans in this path):
                  local axis passes, ONE transpose exchange — a third of
                  dist_base's collective bytes for the same point count
 
+An `ooc_2^K_analytic` record carries the out-of-core factorization and IO
+cost model at the terabyte-class point (default 2^34 points = 128 GiB
+under a 1 GiB budget): io_bytes/shuffle_bytes/working_set plus the
+seconds predicted by the shared ThrottledStore disk model.
+
 Each distributed record also carries the plan's exposed-vs-total
 collective split, and a `dist_overlap*_analytic` record reports the
 PREDICTED win of the chunked ppermute pipeline (DESIGN.md §8) from the
@@ -88,6 +93,10 @@ def main(argv=None):
     ap.add_argument("--seg-len", type=int, default=4096)
     ap.add_argument("--mesh", default="single_pod",
                     choices=["single_pod", "multi_pod"])
+    ap.add_argument("--ooc-log2-n", type=int, default=34,
+                    help="out-of-core analytic record: log2 points")
+    ap.add_argument("--ooc-budget-mb", type=int, default=1024,
+                    help="out-of-core analytic record: budget in MiB")
     ap.add_argument("--out", default=None)
     args = ap.parse_args(argv)
 
@@ -144,6 +153,24 @@ def main(argv=None):
         "collective_s": p_ov.collective_bytes / ICI,
         "exposed_collective_s": p_ov.exposed_collective_bytes / ICI,
         "predicted_overlap_win_s": p_ov.hidden_collective_bytes / ICI,
+    })
+
+    # out-of-core terabyte point: factorization + IO cost model only (the
+    # operand would be 8*2^ooc-log2-n bytes of disk; the streamed run lives
+    # in benchmarks/bench_outofcore.py at verifiable sizes). Disk-model
+    # seconds use the shared ThrottledStore rate so the record is
+    # comparable with bench_pipeline's throughput numbers.
+    from repro.core.pipeline.testing import DISK_MB_S
+    f_ooc = fft_api.factor_out_of_core(1 << args.ooc_log2_n,
+                                       args.ooc_budget_mb << 20)
+    disk_bytes_s = DISK_MB_S * (1 << 20)
+    recs.append({
+        "name": f"ooc_2^{args.ooc_log2_n}_analytic",
+        "analytic_only": True,
+        **f_ooc.as_dict(),
+        "budget_bytes": args.ooc_budget_mb << 20,
+        "disk_model_mb_s": DISK_MB_S,
+        "disk_model_s": f_ooc.io_bytes / disk_bytes_s,
     })
 
     for r in recs:

@@ -53,6 +53,15 @@ if [[ $# -eq 0 && -z "${REPRO_SKIP_CHAOS_BENCH:-}" ]]; then
   python benchmarks/bench_chaos.py --quick
 fi
 
+# out-of-core gate: the streamed four-step over a throttled BlockStore
+# must be bitwise identical to the in-memory oracle with the working set
+# capped far below the operand, and crash-resume mid-shuffle must redo
+# only the lost pass-1 job (BENCH_outofcore.json; exits nonzero on
+# regression). The marked outofcore tests also run in the sweep below.
+if [[ $# -eq 0 && -z "${REPRO_SKIP_OOC_BENCH:-}" ]]; then
+  python benchmarks/bench_outofcore.py --quick
+fi
+
 # --durations: the bench-gated suite keeps growing; keep the slowest
 # tests visible in CI logs so the ~45 min job budget (ci.yml
 # timeout-minutes) is spent knowingly, not discovered on timeout.

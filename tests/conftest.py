@@ -74,6 +74,10 @@ def pytest_configure(config):
         "markers",
         "chaos: seeded fault-injection runs over full pipelined jobs "
         "(deterministic; gated in test.sh/CI alongside bench_chaos.py)")
+    config.addinivalue_line(
+        "markers",
+        "outofcore: streamed out-of-core FFT runs over a real on-disk "
+        "BlockStore (small sizes; the big gate is bench_outofcore.py)")
 
 
 @pytest.fixture

@@ -1,0 +1,81 @@
+"""BlockStore structured integrity errors: every block-granular failure
+surfaces as a `BlockIntegrityError` NAMING the offending block (``index``
++ ``block``), chained ``from`` the underlying error, and classifying as
+IOError so retry/replica policies still treat it as retryable."""
+
+import os
+
+import pytest
+
+from repro.core.pipeline import BlockIntegrityError, BlockStore
+
+BB = 512  # small blocks
+
+
+def _store(tmp_path, nblocks=3):
+    store = BlockStore(tmp_path / "s", block_bytes=BB)
+    store.put_bytes(os.urandom(BB * nblocks))
+    return store
+
+
+def test_is_retryable_ioerror():
+    err = BlockIntegrityError("boom", index=7, block="block_x.bin")
+    assert isinstance(err, IOError)
+    assert (err.index, err.block) == (7, "block_x.bin")
+
+
+def test_read_block_corruption_names_block(tmp_path):
+    store = _store(tmp_path)
+    (store.root / store.blocks[1].name()).write_bytes(b"\0" * BB)
+    with pytest.raises(BlockIntegrityError) as ei:
+        store.read_block(1)
+    assert ei.value.index == 1
+    assert ei.value.block == store.blocks[1].name()
+    # the root cause (the per-replica checksum failure) stays chained
+    assert isinstance(ei.value.__cause__, IOError)
+
+
+def test_put_file_failure_names_block(tmp_path, monkeypatch):
+    store = BlockStore(tmp_path / "s", block_bytes=BB)
+    src = tmp_path / "src.bin"
+    src.write_bytes(os.urandom(4 * BB))
+    orig = store._append_block
+
+    def flaky(off, chunk):  # disk fills up two blocks in
+        if off >= 2 * BB:
+            raise OSError(28, "No space left on device")
+        return orig(off, chunk)
+
+    monkeypatch.setattr(store, "_append_block", flaky)
+    with pytest.raises(BlockIntegrityError) as ei:
+        store.put_file(src)
+    assert ei.value.index == 2
+    assert ei.value.block == f"block_{2 * BB:016d}.bin"
+    assert isinstance(ei.value.__cause__, OSError)
+
+
+def test_getmerge_missing_block_names_it(tmp_path):
+    store = _store(tmp_path)
+    out = tmp_path / "out"
+    for i in (0, 2):  # block 1 never written
+        store.write_output_block(out, i, b"y" * BB)
+    with pytest.raises(BlockIntegrityError) as ei:
+        store.getmerge(out, tmp_path / "merged.bin")
+    assert ei.value.index == 1
+    assert ei.value.block == store.blocks[1].name()
+
+
+def test_getmerge_midstream_failure_names_block(tmp_path):
+    store = _store(tmp_path)
+    out = tmp_path / "out"
+    for i in range(3):
+        store.write_output_block(out, i, b"y" * BB)
+    # block 1 lists fine but fails on open (vanished into a directory)
+    victim = out / store.blocks[1].name()
+    victim.unlink()
+    victim.mkdir()
+    with pytest.raises(BlockIntegrityError) as ei:
+        store.getmerge(out, tmp_path / "merged.bin")
+    assert ei.value.index == 1
+    assert ei.value.block == store.blocks[1].name()
+    assert isinstance(ei.value.__cause__, OSError)

@@ -1,0 +1,251 @@
+"""Out-of-core FFT: factorization, layout contract, streamed execution,
+and the two-phase crash-resume protocol (DESIGN.md §11).
+
+Streamed runs are tiny (2^12..2^14 points) but exercise the REAL path:
+an on-disk BlockStore, both StreamExecutor passes, the shuffle journal,
+and the phase manifests. impl="ref" everywhere a streamed result is
+compared with the in-memory oracle — they must launch identical
+panel-shaped plans for the bitwise contract to hold.
+"""
+
+import numpy as np
+import pytest
+
+import repro.fft as fft_api
+from repro.core.fft.outofcore import (corner_turn, reference_out_of_core)
+from repro.core.pipeline import BlockStore, JobConfig
+from repro.core.resilience import FaultInjector, FaultPlan, FaultRule
+
+pytestmark = pytest.mark.outofcore
+
+N = 1 << 12          # 4096 points: n1 = n2 = 64
+BUDGET = 8 * N // 4  # operand/4 -> multiple jobs per pass
+IMPL = "ref"
+
+
+def _signal(n=N, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.standard_normal((n, 2)).astype(np.float32)
+
+
+def _make_store(tmp_path, sig, block_bytes=None):
+    f = fft_api.factor_out_of_core(len(sig), BUDGET)
+    store = BlockStore(tmp_path / "in",
+                       block_bytes=block_bytes or f.pass1_panel_bytes)
+    store.put_bytes(sig.tobytes())
+    return store
+
+
+def _plan(tmp_path, store, n=N, cfg=None):
+    return fft_api.plan(kind="c2c", n=n, placement="out_of_core",
+                        store=store, work_dir=tmp_path / "ooc",
+                        budget_bytes=BUDGET, impl=IMPL, job_config=cfg)
+
+
+def _shuffle_killer(f, attempts=4):
+    """A schedule that kills one pass-1 job's scatter past its retries."""
+    victim = f.pass1_jobs // 2
+    return FaultInjector(FaultPlan((
+        FaultRule(site="ooc.shuffle", index=victim * f.pass1_jobs + victim,
+                  calls=tuple(range(1, attempts + 1))),)))
+
+
+# ---------------------------------------------------------------------------
+# factorization + analytic model
+
+
+def test_factor_near_square_and_model():
+    f = fft_api.factor_out_of_core(1 << 20, 1 << 22)
+    assert f.n1 * f.n2 == f.n and f.n2 in (f.n1, 2 * f.n1)
+    assert f.t2 * f.pass1_jobs == f.n2
+    assert f.t1 * f.pass2_jobs == f.n1
+    assert f.passes == 2
+    assert f.io_bytes == 4 * f.operand_bytes
+    assert f.shuffle_bytes == 2 * f.operand_bytes
+    assert f.working_set_bytes <= f.budget_bytes
+    assert f.tiles == f.pass1_jobs * f.pass2_jobs
+
+
+def test_factor_rejects_non_pow2_and_tiny_budget():
+    with pytest.raises(ValueError, match="power of"):
+        fft_api.factor_out_of_core(1000, 1 << 20)
+    with pytest.raises(ValueError, match="budget"):
+        fft_api.factor_out_of_core(1 << 20, 1 << 10)
+
+
+def test_factor_rejects_block_not_tiling_panel():
+    with pytest.raises(ValueError, match="block_bytes"):
+        fft_api.factor_out_of_core(1 << 12, BUDGET, block_bytes=3 * 256)
+
+
+def test_planner_validates_out_of_core_args(tmp_path):
+    store = _make_store(tmp_path, _signal())
+    with pytest.raises(ValueError, match="out_of_core"):
+        fft_api.plan(kind="r2c", n=N, placement="out_of_core", store=store,
+                     work_dir=tmp_path / "o", budget_bytes=BUDGET)
+    with pytest.raises(ValueError, match="store"):
+        fft_api.plan(kind="c2c", n=N, placement="out_of_core",
+                     work_dir=tmp_path / "o", budget_bytes=BUDGET)
+    # store= without the placement is an error, not silently ignored
+    with pytest.raises(ValueError, match="placement"):
+        fft_api.plan(kind="c2c", n=N, store=store)
+
+
+# ---------------------------------------------------------------------------
+# layout contract + numerics
+
+
+def test_corner_turn_identity_vs_numpy(tmp_path):
+    """out == T(np.fft.fft(T(s))): the decimated-in/transposed-out
+    contract, checked against numpy at float32-appropriate tolerance."""
+    sig = _signal()
+    store = _make_store(tmp_path, sig)
+    p = _plan(tmp_path, store)
+    p.execute()
+    dest = tmp_path / "merged.bin"
+    p.merge(dest)
+    got = np.frombuffer(dest.read_bytes(), np.float32).reshape(N, 2)
+    got = got[:, 0] + 1j * got[:, 1]
+    s = (sig[:, 0] + 1j * sig[:, 1]).astype(np.complex128)
+    want = corner_turn(
+        np.fft.fft(corner_turn(s, p.factors)), p.factors)
+    rel = np.linalg.norm(got - want) / np.linalg.norm(want)
+    assert rel < 1e-5
+
+
+def test_streamed_bitwise_equals_oracle(tmp_path):
+    sig = _signal()
+    store = _make_store(tmp_path, sig)
+    p = _plan(tmp_path, store)
+    stats = p.execute()
+    dest = tmp_path / "merged.bin"
+    p.merge(dest)
+    assert dest.read_bytes() == reference_out_of_core(
+        sig, p.factors, impl=IMPL)
+    assert stats.pass1_attempts == p.factors.pass1_jobs
+    assert stats.io["total"] == p.factors.io_bytes
+
+
+def test_multi_block_panels(tmp_path):
+    """Panels spanning several store blocks read block-granular."""
+    sig = _signal()
+    f = fft_api.factor_out_of_core(N, BUDGET)
+    store = _make_store(tmp_path, sig,
+                        block_bytes=f.pass1_panel_bytes // 4)
+    p = _plan(tmp_path, store)
+    p.execute()
+    dest = tmp_path / "merged.bin"
+    p.merge(dest)
+    assert dest.read_bytes() == reference_out_of_core(sig, f, impl=IMPL)
+
+
+# ---------------------------------------------------------------------------
+# crash-resume: the two-phase manifest protocol
+
+
+def test_resume_mid_shuffle_redoes_only_lost_job(tmp_path):
+    """Kill one pass-1 job past its retry budget; the resumed run must
+    re-run ONLY that job (FAILED demotes to PENDING on the new
+    invocation, DONE work is never redone) and merge bitwise output."""
+    sig = _signal()
+    store = _make_store(tmp_path, sig)
+    f = fft_api.factor_out_of_core(N, BUDGET)
+    cfg = JobConfig(readers=2, writers=2, inflight=2, speculation=False,
+                    max_retries=3, injector=_shuffle_killer(f))
+    p = _plan(tmp_path, store, cfg=cfg)
+    with pytest.raises(RuntimeError, match="failed"):
+        p.execute()  # the exhausted job aborts the run mid-shuffle
+    # and the pass-2 guard refuses the incomplete shuffle independently
+    with pytest.raises(RuntimeError, match="complete shuffle"):
+        p.run_pass2()
+
+    p2 = _plan(tmp_path, store)
+    stats = p2.execute()
+    assert stats.pass1_attempts == 1  # only the killed job re-ran
+    assert stats.pass2_attempts == f.pass2_jobs
+    dest = tmp_path / "merged.bin"
+    p2.merge(dest)
+    assert dest.read_bytes() == reference_out_of_core(sig, f, impl=IMPL)
+
+
+def test_resume_between_phases_redoes_no_pass1_work(tmp_path):
+    """Crash after the shuffle completed: resume runs zero pass-1
+    attempts and streams pass 2 from the journaled tiles."""
+    sig = _signal()
+    store = _make_store(tmp_path, sig)
+    p = _plan(tmp_path, store)
+    p.run_pass1()  # "crash" here: phase 1 durable, phase 2 never started
+
+    p2 = _plan(tmp_path, store)
+    stats = p2.execute()
+    assert stats.pass1_attempts == 0
+    assert stats.pass2_attempts == p2.factors.pass2_jobs
+    dest = tmp_path / "merged.bin"
+    p2.merge(dest)
+    assert dest.read_bytes() == reference_out_of_core(
+        sig, p2.factors, impl=IMPL)
+
+
+def test_resume_mid_pass2_redoes_only_unfinished(tmp_path):
+    """Kill one pass-2 tile gather past its retries: the resumed run
+    re-runs no pass-1 work and only the lost pass-2 job."""
+    sig = _signal()
+    store = _make_store(tmp_path, sig)
+    f = fft_api.factor_out_of_core(N, BUDGET)
+    victim = f.pass2_jobs // 2
+    inj = FaultInjector(FaultPlan((
+        FaultRule(site="ooc.pass2", index=victim * f.pass1_jobs,
+                  calls=(1, 2, 3, 4)),)))
+    cfg = JobConfig(readers=2, writers=2, inflight=2, speculation=False,
+                    max_retries=3, injector=inj)
+    p = _plan(tmp_path, store, cfg=cfg)
+    with pytest.raises(RuntimeError, match="failed"):
+        p.execute()  # pass 1 + shuffle complete; one pass-2 job dies
+
+    p2 = _plan(tmp_path, store)
+    stats = p2.execute()
+    assert stats.pass1_attempts == 0
+    assert stats.pass2_attempts == 1
+    dest = tmp_path / "merged.bin"
+    p2.merge(dest)
+    assert dest.read_bytes() == reference_out_of_core(sig, f, impl=IMPL)
+
+
+def test_pass2_guard_requires_complete_shuffle(tmp_path):
+    store = _make_store(tmp_path, _signal())
+    p = _plan(tmp_path, store)
+    with pytest.raises(RuntimeError, match="complete shuffle"):
+        p.run_pass2()
+
+
+def test_merge_requires_complete_output(tmp_path):
+    store = _make_store(tmp_path, _signal())
+    p = _plan(tmp_path, store)
+    with pytest.raises(IOError, match="missing"):
+        p.merge(tmp_path / "merged.bin")
+
+
+# ---------------------------------------------------------------------------
+# plan-cache observability (repro.fft.cache_info)
+
+
+def test_cache_info_counts_hits_and_misses(tmp_path):
+    n = 1 << 13  # n1=64, n2=128: the two passes cache DISTINCT plans
+    budget = 8 * n // 4
+    fft_api.clear_plan_cache()
+    base = fft_api.cache_info()
+    assert base["entries"] == 0 and base["hits"] == 0
+    f = fft_api.factor_out_of_core(n, budget)
+    store = BlockStore(tmp_path / "in", block_bytes=f.pass1_panel_bytes)
+    store.put_bytes(_signal(n).tobytes())
+    p = fft_api.plan(kind="c2c", n=n, placement="out_of_core", store=store,
+                     work_dir=tmp_path / "ooc", budget_bytes=budget,
+                     impl=IMPL)
+    p.execute()
+    info = fft_api.cache_info()
+    # one cached plan per pass, re-hit by every subsequent job
+    assert info["misses"] == 2 and info["entries"] == 2
+    jobs = f.pass1_jobs + f.pass2_jobs
+    assert info["hits"] == jobs - 2
+    fft_api.clear_plan_cache()
+    assert fft_api.cache_info()["entries"] == 0
