@@ -1,0 +1,217 @@
+"""Serve gate: chaos-under-load for the FFT-as-a-service front-end.
+
+The service's acceptance property (DESIGN.md §12) is that overload and
+injected faults change *which* requests run and how often they retry —
+never the correctness of what comes back, and never the boundedness of
+the system. This benchmark drives a synthetic open-loop many-client
+workload (mixed n, c2c + r2c) at offered load > capacity under a seeded
+25% fault storm across all three serve.* sites and records the
+trajectory in BENCH_serve.json:
+
+  * **Classified-or-correct** — every submitted request lands in exactly
+    one bucket: ``ok`` (and then its result is BITWISE identical to a
+    fault-free oracle that executes the request ALONE at the same launch
+    batch size — co-batched content and row position provably don't
+    affect a row, so any dynamic grouping must reproduce the oracle
+    exactly) or a structured, named rejection/shed/failure. Zero silent
+    drops, zero unclassified errors, zero tickets pending after drain.
+  * **Boundedness** — service occupancy never exceeds ``queue_depth``
+    (the admission bound holds even while retries recirculate), the
+    overload actually produced queue_full rejections (offered > capacity
+    was real), p99 stays finite (no deadlock), and the batcher coalesced
+    >= 2 requests/launch on average.
+  * **Deadline shedding** — a burst submitted against a ~ms deadline
+    while the batcher is held is shed entirely BEFORE launch, each with
+    a structured `DeadlineExceeded` whose breakdown shows queue_s > 0
+    and execute_s == 0 (late work never reached the device).
+
+Wall times and p50/p99/QPS are recorded un-gated except for the finite-
+p99 deadlock guard. The storm is a pure function of SEED — rerunning
+this benchmark anywhere replays byte-for-byte the same faults.
+"""
+
+from __future__ import annotations
+
+import os
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import json  # noqa: E402
+import time  # noqa: E402
+from pathlib import Path  # noqa: E402
+
+from repro.core.resilience import (FaultInjector, FaultPlan,  # noqa: E402
+                                   RetryPolicy, clear_events, events)
+import repro.fft as fft_api  # noqa: E402
+from repro.serve import FftService  # noqa: E402
+from repro.serve import loadgen  # noqa: E402
+
+OUT_PATH = Path(__file__).resolve().parent.parent / "BENCH_serve.json"
+
+SEED = 1407              # the fault storm is a pure function of this
+RATE = 0.25              # per (site, request) fault probability
+IMPL = "ref"             # serving orchestration under fault, not kernels
+CLIENTS = 3
+COALESCE = 4
+QUEUE_DEPTH = 40         # < the open-loop flood, so admission must reject
+MAX_INFLIGHT = 2
+MAX_ATTEMPTS = 4
+SITES = ("serve.admit", "serve.batch", "serve.execute")
+REJECT_BUCKETS = ("queue_full", "rate_limit", "inflight_cap",
+                  "admit_fault", "closed")
+
+
+def _storm_scenario(num_requests: int) -> dict:
+    """Open-loop flood through a 25% fault storm; classify everything."""
+    plan = FaultPlan.random(SEED, num_requests, sites=SITES, rate=RATE)
+    injector = FaultInjector(plan)
+    clear_events()
+    service = FftService(
+        impl=IMPL, coalesce=COALESCE, queue_depth=QUEUE_DEPTH,
+        max_inflight=MAX_INFLIGHT, injector=injector,
+        retry=RetryPolicy(max_attempts=MAX_ATTEMPTS, base_delay_s=0.0))
+    t0 = time.monotonic()
+    records = loadgen.drive(service, num_requests=num_requests,
+                            clients=CLIENTS, seed=SEED)
+    outcomes = {rec.rid: loadgen.classify(rec) for rec in records}
+    service.close(drain=True)
+    wall = time.monotonic() - t0
+    drained_idle = service.idle()
+
+    buckets: dict = {}
+    for o in outcomes.values():
+        buckets[o] = buckets.get(o, 0) + 1
+    bitwise_ok = mismatches = 0
+    for rec in records:
+        if outcomes[rec.rid] != "ok":
+            continue
+        want = loadgen.oracle(
+            rec.shape, loadgen.request_operands(SEED, rec.rid, rec.shape),
+            impl=IMPL, batch_rows=rec.ticket.batch_rows)
+        if loadgen.bitwise_equal(rec.ticket.value, want):
+            bitwise_ok += 1
+        else:
+            mismatches += 1
+    stats = service.stats.snapshot()
+    classified = sum(buckets.get(b, 0) for b in REJECT_BUCKETS) + sum(
+        buckets.get(b, 0) for b in ("ok", "shed", "deadline", "failed"))
+    return {
+        "num_requests": num_requests,
+        "wall_s": round(wall, 4),
+        "qps": round(buckets.get("ok", 0) / wall, 1),
+        "outcomes": dict(sorted(buckets.items())),
+        "bitwise_ok": bitwise_ok,
+        "bitwise_mismatches": mismatches,
+        "all_classified": classified == len(records) == num_requests,
+        "drained_idle": drained_idle,
+        "stats": stats,
+        "injector": injector.summary(),
+        "degrade_events": len(events("service_degrade")),
+        "plan_cache": fft_api.cache_info(),
+    }
+
+
+def _deadline_scenario(burst: int = 24) -> dict:
+    """A burst against a ~ms deadline, batcher held: all shed pre-launch."""
+    service = FftService(impl=IMPL, coalesce=COALESCE, queue_depth=burst,
+                         default_deadline_s=0.002, start=False)
+    records = loadgen.drive(service, num_requests=burst, clients=1,
+                            seed=SEED + 1)
+    time.sleep(0.05)          # every deadline lapses while nothing runs
+    service.start()           # the sweep now sheds the whole backlog
+    outcomes = [loadgen.classify(r, timeout=10.0) for r in records]
+    breakdowns = [r.ticket.error for r in records
+                  if outcomes[records.index(r)] == "deadline"]
+    service.close(drain=True)
+    return {
+        "burst": burst,
+        "admitted": service.stats.admitted,
+        "deadline": outcomes.count("deadline"),
+        "shed_before_launch": sum(
+            1 for e in breakdowns
+            if e.queue_s > 0 and e.execute_s == 0.0 and e.stage == "queue"),
+        "other": {o: outcomes.count(o) for o in set(outcomes)
+                  if o != "deadline"},
+    }
+
+
+def run(quick: bool = False):
+    fft_api.clear_plan_cache()
+    num_requests = 96 if quick else 240
+    storm = _storm_scenario(num_requests)
+    deadline = _deadline_scenario()
+
+    s = storm["stats"]
+    checks = {
+        # acceptance: every admitted request is bitwise-correct or a
+        # classified structured error — no silent drops
+        "serve_all_requests_classified": storm["all_classified"],
+        "serve_ok_results_bitwise": storm["bitwise_mismatches"] == 0
+            and storm["bitwise_ok"] == storm["outcomes"].get("ok", 0),
+        "serve_no_silent_drops":
+            storm["outcomes"].get("silent_drop", 0) == 0,
+        # acceptance: the admission bound holds, retries included
+        "serve_queue_bounded": s["max_queued"] <= QUEUE_DEPTH,
+        "serve_overload_rejections":
+            storm["outcomes"].get("queue_full", 0) > 0,
+        # acceptance: drains to idle on shutdown; p99 finite = no deadlock
+        "serve_drained_idle": storm["drained_idle"],
+        "serve_p99_bounded": 0.0 < s["latency"]["p99_ms"] < 60_000.0,
+        # acceptance: >= 2 requests/launch mean coalescing on mixed specs
+        "serve_coalescing_ge_2": s.get("mean_requests_per_launch", 0) >= 2,
+        "serve_faults_fired": storm["injector"]["total_fired"] > 0,
+        # deadline misses shed BEFORE launch, with the queue-stage
+        # breakdown (execute_s == 0) on every one
+        "serve_deadline_shed_pre_launch":
+            deadline["deadline"] == deadline["admitted"] > 0
+            and deadline["shed_before_launch"] == deadline["deadline"],
+    }
+    doc = {
+        "quick": quick,
+        "config": {"seed": SEED, "rate": RATE, "impl": IMPL,
+                   "clients": CLIENTS, "coalesce": COALESCE,
+                   "queue_depth": QUEUE_DEPTH,
+                   "max_inflight": MAX_INFLIGHT,
+                   "max_attempts": MAX_ATTEMPTS, "sites": SITES,
+                   "mix": [sh.label for sh in loadgen.DEFAULT_MIX]},
+        "storm": storm,
+        "deadline": deadline,
+        "checks": checks,
+    }
+    OUT_PATH.write_text(json.dumps(doc, indent=1))
+
+    rows = [
+        {"name": "serve_storm", "us_per_call": storm["wall_s"] * 1e6,
+         "derived": f"ok={storm['outcomes'].get('ok', 0)}/{num_requests} "
+                    f"qps={storm['qps']} "
+                    f"p50={s['latency']['p50_ms']}ms "
+                    f"p99={s['latency']['p99_ms']}ms "
+                    f"coalesce={s.get('mean_requests_per_launch', 0)} "
+                    f"retries={s['retries']} "
+                    f"fired={storm['injector']['total_fired']}"},
+        {"name": "serve_deadline_burst", "us_per_call": 0.0,
+         "derived": f"admitted={deadline['admitted']} "
+                    f"shed_pre_launch={deadline['shed_before_launch']}"},
+        {"name": "serve_checks", "us_per_call": 0.0,
+         "derived": " ".join(f"{k}={'PASS' if ok else 'FAIL'}"
+                             for k, ok in checks.items())},
+    ]
+    return rows
+
+
+def main(argv=None) -> int:
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args(argv)
+    for row in run(quick=args.quick):
+        print(f"{row['name']},{row['us_per_call']:.1f},\"{row['derived']}\"")
+    checks = json.loads(OUT_PATH.read_text())["checks"]
+    if not all(checks.values()):
+        print(f"FAIL: {checks}")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -14,8 +14,8 @@ import traceback
 
 from benchmarks import (bench_chaos, bench_distributed, bench_fft,
                         bench_fft2, bench_outofcore, bench_pipeline,
-                        fig2_total_time, fig3_fft_time, fig45_io_fraction,
-                        fig6_scaling, roofline)
+                        bench_serve, fig2_total_time, fig3_fft_time,
+                        fig45_io_fraction, fig6_scaling, roofline)
 
 MODULES = {
     "fig2": fig2_total_time,
@@ -28,6 +28,7 @@ MODULES = {
     "distributed": bench_distributed,
     "chaos": bench_chaos,
     "outofcore": bench_outofcore,
+    "serve": bench_serve,
     "roofline": roofline,
 }
 

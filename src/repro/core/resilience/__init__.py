@@ -29,6 +29,8 @@ gated in test.sh/CI) and `tests/test_chaos.py` (`pytest -m chaos`).
 """
 
 from repro.core.resilience.events import clear_events, events, record_event
+from repro.core.resilience.events import set_capacity as set_event_capacity
+from repro.core.resilience.events import stats as event_stats
 from repro.core.resilience.faults import (SITES, FaultInjector, FaultPlan,
                                           FaultRule, InjectedFault,
                                           maybe_fire)
@@ -43,7 +45,9 @@ __all__ = [
     "RetryPolicy",
     "RetryState",
     "clear_events",
+    "event_stats",
     "events",
     "maybe_fire",
     "record_event",
+    "set_event_capacity",
 ]

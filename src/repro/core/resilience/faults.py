@@ -35,6 +35,15 @@ Injection sites (each threaded through its owning layer):
                       (core/fft/outofcore.py; index = r*C + c tile id)
   ooc.pass2           out-of-core pass-2 tile read/assemble (index =
                       r*C + c tile id)
+  serve.admit         `FftService.submit` admission (index = request seq;
+                      the request is rejected with a structured error, it
+                      never enters the queue)
+  serve.batch         batcher group formation, fired per member BEFORE
+                      gather/launch — one hit fails the whole coalesced
+                      batch pre-launch, members re-enter the retry path
+  serve.execute       writeback realization, fired per member AFTER the
+                      device sync (simulates D2H/result corruption; the
+                      batch's results are discarded and members retried)
   ==================  =====================================================
 
 All raising sites throw `InjectedFault` (an ``IOError`` subclass, so the
@@ -63,6 +72,11 @@ SITES = (
     # schedule — the chaos gate's fixed-seed runs stay byte-stable)
     "ooc.shuffle",
     "ooc.pass2",
+    # appended after the ooc pair, same append-only contract (asserted by
+    # tests/test_resilience.py::test_seeded_schedule_stable_under_append)
+    "serve.admit",
+    "serve.batch",
+    "serve.execute",
 )
 
 # sites a seeded random plan draws from by default: the raising, per-block

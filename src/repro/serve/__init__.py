@@ -1,3 +1,24 @@
 from repro.serve.engine import ServeEngine, greedy_generate
+from repro.serve.fft_service import (
+    DeadlineExceeded,
+    FftService,
+    FftTicket,
+    RequestFailed,
+    ServiceClosed,
+    ServiceError,
+    ServiceOverload,
+    ServiceStats,
+)
 
-__all__ = ["ServeEngine", "greedy_generate"]
+__all__ = [
+    "DeadlineExceeded",
+    "FftService",
+    "FftTicket",
+    "RequestFailed",
+    "ServeEngine",
+    "ServiceClosed",
+    "ServiceError",
+    "ServiceOverload",
+    "ServiceStats",
+    "greedy_generate",
+]

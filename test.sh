@@ -62,6 +62,16 @@ if [[ $# -eq 0 && -z "${REPRO_SKIP_OOC_BENCH:-}" ]]; then
   python benchmarks/bench_outofcore.py --quick
 fi
 
+# serve gate: the FFT-as-a-service front-end under an open-loop overload
+# with a seeded 25% fault storm must return a bitwise-correct result or a
+# classified structured error for every request, keep occupancy within
+# queue_depth, shed deadline misses before launch, coalesce >= 2
+# requests/launch, and drain to idle (BENCH_serve.json; exits nonzero on
+# regression). The marked serve tests also run in the sweep below.
+if [[ $# -eq 0 && -z "${REPRO_SKIP_SERVE_BENCH:-}" ]]; then
+  python benchmarks/bench_serve.py --quick
+fi
+
 # --durations: the bench-gated suite keeps growing; keep the slowest
 # tests visible in CI logs so the ~45 min job budget (ci.yml
 # timeout-minutes) is spent knowingly, not discovered on timeout.

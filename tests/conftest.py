@@ -78,6 +78,10 @@ def pytest_configure(config):
         "markers",
         "outofcore: streamed out-of-core FFT runs over a real on-disk "
         "BlockStore (small sizes; the big gate is bench_outofcore.py)")
+    config.addinivalue_line(
+        "markers",
+        "serve: FFT-as-a-service front-end tests (admission control, "
+        "dynamic batching, deadlines; the load gate is bench_serve.py)")
 
 
 @pytest.fixture

@@ -1,0 +1,347 @@
+"""FftService unit tests: admission, batching, deadlines, faults, degrade.
+
+The end-to-end chaos gate is benchmarks/bench_serve.py; these tests pin
+each mechanism in isolation with deterministic schedules (explicit
+`FaultRule`s, start=False services so the batcher can't race admission
+assertions, injectable clocks via `RetryPolicy`).
+"""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.resilience import (FaultInjector, FaultPlan, RetryPolicy,
+                                   clear_events, events, meshstate)
+from repro.core.resilience.faults import FaultRule, InjectedFault
+import repro.fft as fft_api
+from repro.serve import loadgen
+from repro.serve.fft_service import (DeadlineExceeded, FftService,
+                                     RequestFailed, ServiceClosed,
+                                     ServiceOverload)
+
+pytestmark = pytest.mark.serve
+
+N = 128  # small pow2 so every launch is instant on CPU
+
+
+def _ops(rows, n=N, kind="c2c", seed=0):
+    rng = np.random.default_rng(seed)
+    dims = (rows, n) if rows else (n,)
+    if kind == "c2c":
+        return (rng.standard_normal(dims, dtype=np.float32),
+                rng.standard_normal(dims, dtype=np.float32))
+    return (rng.standard_normal(dims, dtype=np.float32),)
+
+
+def _service(**kw):
+    kw.setdefault("impl", "ref")
+    return FftService(**kw)
+
+
+# ------------------------------------------------------------------ results
+
+
+def test_c2c_and_r2c_round_trip_bitwise():
+    with _service() as service:
+        tc = service.submit("c2c", *_ops(2))
+        tr = service.submit("r2c", *_ops(2, kind="r2c", seed=1))
+        cr, ci = tc.result(timeout=30)
+        want = np.fft.fft(_ops(2)[0] + 1j * _ops(2)[1], axis=-1)
+        np.testing.assert_allclose(cr + 1j * ci, want, rtol=1e-4, atol=1e-3)
+        rr, ri = tr.result(timeout=30)
+        wantr = np.fft.rfft(_ops(2, kind="r2c", seed=1)[0], axis=-1)
+        np.testing.assert_allclose(rr + 1j * ri, wantr, rtol=1e-4, atol=1e-3)
+        assert tc.timings["total_s"] > 0 and tc.batch_rows >= 2
+
+
+def test_single_row_operand_is_squeezed_back():
+    with _service() as service:
+        t = service.submit("c2c", *_ops(0))       # 1-D operands, no batch
+        xr, xi = t.result(timeout=30)
+        assert xr.shape == (N,) and xi.shape == (N,)
+
+
+def test_coalescing_uses_at_most_two_plans_per_key():
+    fft_api.clear_plan_cache()
+    service = _service(coalesce=4, start=False)
+    tickets = [service.submit("c2c", *_ops(2, seed=i)) for i in range(5)]
+    service.start()
+    service.close(drain=True)
+    # FIFO grouping: the first 4 form the full batch, the 5th launches as
+    # a singleton after max_batch_delay_s — the 2-plan full/tail trick
+    assert [t.batch_rows for t in tickets] == [8, 8, 8, 8, 2]
+    assert fft_api.cache_info()["entries"] <= 2
+    # coalesced and singleton results both match the fault-free oracle
+    # replayed at the same launch batch size, bit for bit
+    shape = loadgen.RequestShape("c2c", N, 2)
+    for i, t in enumerate(tickets):
+        want = loadgen.oracle(shape, _ops(2, seed=i), impl="ref",
+                              batch_rows=t.batch_rows)
+        assert loadgen.bitwise_equal(t.result(), want)
+
+
+# ---------------------------------------------------------------- admission
+
+
+def test_queue_depth_bounds_admission():
+    service = _service(queue_depth=4, start=False)
+    tickets = [service.submit("c2c", *_ops(2, seed=i)) for i in range(6)]
+    rejected = [t for t in tickets if t.error is not None]
+    assert len(rejected) == 2
+    for t in rejected:
+        assert isinstance(t.error, ServiceOverload)
+        assert t.error.reason == "queue_full"
+        assert t.error.as_dict()["reason"] == "queue_full"
+    assert service.stats.admitted == 4
+    assert service.stats.rejected == {"queue_full": 2}
+    service.start()
+    service.close(drain=True)
+    assert all(t.error is None for t in tickets[:4])
+    assert service.idle()
+
+
+def test_per_spec_token_bucket_rate_limits():
+    service = _service(per_spec_qps=1e-6, per_spec_burst=2, start=False)
+    tickets = [service.submit("c2c", *_ops(2, seed=i)) for i in range(4)]
+    reasons = [t.error.reason for t in tickets if t.error is not None]
+    assert reasons == ["rate_limit", "rate_limit"]
+    # a different spec key has its own bucket
+    assert service.submit("r2c", *_ops(2, kind="r2c")).error is None
+    service.start()
+    service.close(drain=True)
+
+
+def test_per_spec_inflight_cap():
+    service = _service(per_spec_inflight=1, start=False)
+    t1 = service.submit("c2c", *_ops(2))
+    t2 = service.submit("c2c", *_ops(2, seed=1))
+    other = service.submit("r2c", *_ops(2, kind="r2c"))
+    assert t1.error is None and other.error is None
+    assert isinstance(t2.error, ServiceOverload)
+    assert t2.error.reason == "inflight_cap"
+    service.start()
+    service.close(drain=True)
+    # the slot freed at completion: admission works again
+    assert service.stats.admitted == 2
+
+
+def test_submit_validation_is_synchronous():
+    with _service(start=False) as service:
+        with pytest.raises(ValueError, match="kind"):
+            service.submit("dct", *_ops(2))
+        with pytest.raises(ValueError, match="operand"):
+            service.submit("c2c", _ops(2)[0])          # c2c needs xr, xi
+        with pytest.raises(ValueError, match="shapes differ"):
+            service.submit("c2c", np.zeros((2, N), np.float32),
+                           np.zeros((3, N), np.float32))
+        with pytest.raises(ValueError):
+            service.submit("c2c", *_ops(2, n=100))     # not a power of two
+
+
+# ---------------------------------------------------------------- deadlines
+
+
+def test_deadline_shed_before_launch_with_breakdown():
+    service = _service(default_deadline_s=0.002, start=False)
+    tickets = [service.submit("c2c", *_ops(2, seed=i)) for i in range(3)]
+    time.sleep(0.05)          # every deadline lapses while nothing runs
+    service.start()           # the sweep sheds the whole backlog
+    service.close(drain=True)
+    for t in tickets:
+        err = t.error
+        assert isinstance(err, DeadlineExceeded)
+        assert err.stage == "queue"
+        assert err.queue_s > 0 and err.execute_s == 0.0
+        d = err.as_dict()
+        assert d["deadline_s"] == pytest.approx(0.002)
+        with pytest.raises(DeadlineExceeded):
+            t.result()
+    assert service.stats.deadline_exceeded == 3
+
+
+# ------------------------------------------------------------ faults, retry
+
+
+def test_batch_fault_retries_then_succeeds():
+    # one member faults on its FIRST serve.batch pass: the whole group
+    # fails (fire_group semantics), every member retries, relaunch clean
+    rules = (FaultRule("serve.batch", 0, (1,)),)
+    injector = FaultInjector(FaultPlan(rules))
+    service = _service(injector=injector, coalesce=4, start=False,
+                       retry=RetryPolicy(max_attempts=3, base_delay_s=0.0))
+    tickets = [service.submit("c2c", *_ops(2, seed=i)) for i in range(4)]
+    service.start()
+    service.close(drain=True)
+    for t in tickets:
+        assert t.error is None and t.attempts == 2
+    assert service.stats.retries == 4
+    assert injector.fired["serve.batch"] >= 1
+
+
+def test_retry_budget_exhaustion_chains_the_cause():
+    # request 0 faults on every serve.batch pass; budget of 2 attempts
+    rules = (FaultRule("serve.batch", 0, tuple(range(1, 10))),)
+    service = _service(injector=FaultInjector(FaultPlan(rules)),
+                       retry=RetryPolicy(max_attempts=2, base_delay_s=0.0),
+                       start=False)
+    t = service.submit("c2c", *_ops(2))
+    service.start()
+    service.close(drain=True)
+    assert isinstance(t.error, RequestFailed)
+    assert t.error.stage == "batch" and t.error.attempts == 2
+    assert isinstance(t.error.__cause__, InjectedFault)
+    assert "InjectedFault" in t.error.as_dict()["cause"]
+    assert service.stats.failed == 1 and service.idle()
+
+
+def test_execute_fault_is_retried_too():
+    rules = (FaultRule("serve.execute", 0, (1,)),)
+    service = _service(injector=FaultInjector(FaultPlan(rules)),
+                       retry=RetryPolicy(max_attempts=3, base_delay_s=0.0),
+                       start=False)
+    t = service.submit("c2c", *_ops(2))
+    service.start()
+    service.close(drain=True)
+    assert t.error is None and t.attempts == 2
+    assert service.stats.retries == 1
+
+
+# ------------------------------------------------------- overload shedding
+
+
+def test_sustained_overload_sheds_by_policy():
+    clear_events()
+    service = _service(queue_depth=4, shed_after=2, shed_fraction=0.5,
+                       shed_policy="oldest_deadline", start=False)
+    admitted = [service.submit("c2c", *_ops(2, seed=i)) for i in range(4)]
+    # hammer a full queue until the strike counter requests a shed
+    for i in range(3):
+        assert service.submit("c2c", *_ops(2, seed=9 + i)).error is not None
+    service.start()
+    service.close(drain=True)
+    shed = [t for t in admitted
+            if isinstance(t.error, ServiceOverload)
+            and t.error.reason == "shed"]
+    assert len(shed) == 2 == service.stats.shed  # ceil(0.5 * 4)
+    # oldest_deadline with no deadlines falls back to submit (seq) order
+    assert [t.seq for t in shed] == [0, 1]
+    ev = events("service_degrade")
+    assert ev and ev[-1]["reason"] == "overload"
+    assert ev[-1]["policy"] == "oldest_deadline"
+
+
+def test_shed_policy_validated():
+    with pytest.raises(ValueError, match="shed_policy"):
+        _service(shed_policy="noisiest_neighbor", start=False)
+
+
+# -------------------------------------------------------- degrade, recover
+
+
+def test_batcher_crash_recovers_and_keeps_serving():
+    clear_events()
+    service = _service(start=False)
+    boom = {"armed": True}
+    orig = service._sweep_deadlines
+
+    def crashing_sweep():
+        if boom.pop("armed", False):
+            raise RuntimeError("batcher bug")
+        orig()
+
+    service._sweep_deadlines = crashing_sweep
+    service.start()
+    t = service.submit("c2c", *_ops(2))
+    assert t.result(timeout=30) is not None
+    assert service.stats.crash_recoveries >= 1
+    recs = events("service_crash_recovered")
+    assert recs and "batcher bug" in recs[-1]["error"]
+    service.close(drain=True)
+
+
+def test_device_loss_logs_degrade_and_keeps_serving():
+    jax = pytest.importorskip("jax")
+    from jax.sharding import Mesh
+    clear_events()
+    mesh = Mesh(np.asarray(jax.devices()[:1]), ("x",))
+    service = _service(mesh=mesh, placement="auto", degrade=True)
+    try:
+        assert service.submit("c2c", *_ops(2)).result(timeout=30)
+        meshstate.lose_devices([d.id for d in mesh.devices.flat])
+        deadline = time.monotonic() + 10.0
+        while (not events("service_degrade")
+               and time.monotonic() < deadline):
+            time.sleep(0.005)
+        ev = events("service_degrade")
+        assert ev and ev[-1]["reason"] == "device_loss"
+        assert ev[-1]["action"] == "replan_fallback_degrade"
+        assert service.stats.degrade_events >= 1
+        # fallback="degrade" re-plans around the lost device: still serving
+        t = service.submit("c2c", *_ops(2, seed=3))
+        xr, xi = t.result(timeout=30)
+        ref = _ops(2, seed=3)
+        want = np.fft.fft(ref[0] + 1j * ref[1], axis=-1)
+        np.testing.assert_allclose(xr + 1j * xi, want, rtol=1e-4, atol=1e-3)
+    finally:
+        service.close(drain=True)
+        meshstate.restore_devices()
+
+
+# ------------------------------------------------------------------ closing
+
+
+def test_close_without_drain_cancels_queued_requests():
+    service = _service(start=False)
+    tickets = [service.submit("c2c", *_ops(2, seed=i)) for i in range(3)]
+    service.close(drain=False)
+    for t in tickets:
+        assert isinstance(t.error, ServiceClosed)
+    assert service.idle()
+
+
+def test_submit_after_close_is_rejected_closed():
+    service = _service()
+    service.close(drain=True)
+    t = service.submit("c2c", *_ops(2))
+    assert isinstance(t.error, ServiceClosed)
+    assert service.stats.rejected.get("closed") == 1
+
+
+def test_drain_waits_for_inflight_work():
+    service = _service(coalesce=2)
+    tickets = [service.submit("c2c", *_ops(2, seed=i)) for i in range(8)]
+    service.close(drain=True)
+    assert all(t.done() for t in tickets)
+    assert all(t.error is None for t in tickets)
+    assert service.idle()
+    snap = service.stats.snapshot()
+    assert snap["completed"] == 8
+    assert snap["latency"]["count"] == 8 and snap["latency"]["p99_ms"] > 0
+
+
+def test_many_clients_concurrent_submission_is_safe():
+    service = _service(queue_depth=64, coalesce=4)
+    results: list = []
+    lock = threading.Lock()
+
+    def client(cid):
+        for i in range(8):
+            t = service.submit("c2c", *_ops(2, seed=cid * 100 + i))
+            with lock:
+                results.append(t)
+
+    threads = [threading.Thread(target=client, args=(c,)) for c in range(4)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    service.close(drain=True)
+    assert len(results) == 32
+    ok = sum(1 for t in results if t.error is None)
+    rej = sum(1 for t in results
+              if isinstance(t.error, ServiceOverload))
+    assert ok + rej == 32 and ok > 0
+    assert service.stats.max_queued <= 64
+    assert service.idle()

@@ -144,6 +144,55 @@ def test_fault_plan_parse_kv_and_json(tmp_path):
         FaultPlan.parse("sed=3", num_blocks=8)
 
 
+def test_fault_plan_parse_rejects_malformed_kv():
+    with pytest.raises(ValueError, match="expected key=value"):
+        FaultPlan.parse("seed=3,rate0.5", num_blocks=8)
+    with pytest.raises(ValueError, match="unknown --faults keys"):
+        FaultPlan.parse("seed=3,rte=0.5", num_blocks=8)
+
+
+def test_fault_plan_parse_unknown_site_names():
+    with pytest.raises(ValueError, match="unknown fault site"):
+        FaultPlan.parse("seed=3,sites=blockstore.read+serve.nope",
+                        num_blocks=8)
+    with pytest.raises(ValueError, match="unknown fault site"):
+        FaultPlan.parse(json.dumps(
+            {"rules": [{"site": "not.a.site", "index": 0}]}), num_blocks=8)
+
+
+def test_fault_plan_parse_bad_file_path(tmp_path):
+    with pytest.raises(OSError):
+        FaultPlan.parse(f"@{tmp_path / 'missing.json'}", num_blocks=8)
+
+
+def test_fault_plan_parse_serve_sites():
+    p = FaultPlan.parse(
+        "seed=3,rate=1.0,sites=serve.admit+serve.batch+serve.execute",
+        num_blocks=4)
+    assert {r.site for r in p.rules} == {
+        "serve.admit", "serve.batch", "serve.execute"}
+    assert len(p.rules) == 12  # rate=1.0: every (site, request)
+
+
+def test_seeded_schedule_stable_under_append():
+    """SITES is append-only: drawing over a PREFIX of the site tuple must
+    yield byte-identical rules whether or not later sites exist, because
+    `FaultPlan.random` consumes the RNG stream site-by-site in order.
+    This is the contract that lets serve.* (and any future sites) append
+    without perturbing existing seeded chaos schedules."""
+    from repro.core.resilience.faults import SITES
+
+    assert SITES[-3:] == ("serve.admit", "serve.batch", "serve.execute")
+    prefix = tuple(s for s in SITES
+                   if s != "mesh.device" and not s.startswith("serve."))
+    extended = prefix + SITES[-3:]
+    for seed in (0, 7, 1407):
+        old = FaultPlan.random(seed, 16, sites=prefix, rate=0.3)
+        new = FaultPlan.random(seed, 16, sites=extended, rate=0.3)
+        kept = tuple(r for r in new.rules if r.site in prefix)
+        assert kept == old.rules  # pre-existing sites: identical schedule
+
+
 def test_injector_fires_on_scheduled_call_only():
     inj = FaultInjector(FaultPlan((
         FaultRule("blockstore.read", 2, calls=(2,)),)))
@@ -203,6 +252,36 @@ def test_resilience_event_log():
     assert only[0]["reason"] == "test" and "t" in only[0]
     clear_events()
     assert events() == []
+
+
+def test_event_log_is_a_capped_ring_buffer():
+    import importlib
+    # the package re-exports the events() FUNCTION under the same name as
+    # the submodule, so resolve the module explicitly
+    ev_mod = importlib.import_module("repro.core.resilience.events")
+
+    clear_events()
+    old_cap = ev_mod.capacity()
+    try:
+        ev_mod.set_capacity(4)
+        for i in range(10):
+            record_event("tick", i=i)
+        got = events("tick")
+        assert [e["i"] for e in got] == [6, 7, 8, 9]  # keep-latest
+        assert ev_mod.dropped() == 6
+        assert ev_mod.stats() == {"retained": 4, "capacity": 4,
+                                  "dropped": 6}
+        # shrinking keeps the newest and counts the evicted as dropped
+        ev_mod.set_capacity(2)
+        assert [e["i"] for e in events("tick")] == [8, 9]
+        assert ev_mod.dropped() == 8
+        with pytest.raises(ValueError, match="capacity"):
+            ev_mod.set_capacity(0)
+        clear_events()
+        assert ev_mod.dropped() == 0 and events() == []
+    finally:
+        ev_mod.set_capacity(old_cap)
+        clear_events()
 
 
 # ------------------------------------------------- blockstore repair

@@ -1,0 +1,58 @@
+"""Smoke tests for the ServeEngine LM stub (prefill + greedy decode).
+
+The serve package's tier-1 floor: the engine must produce the requested
+number of tokens, deterministically for greedy decode, and its jit'd
+prefill/decode steps must be reusable across calls (the launcher times a
+second call as steady state, so a second call has to work — the decode
+step donates its caches, which only matters within one generate call).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models.transformer import TransformerLM
+from repro.serve import ServeEngine, greedy_generate
+from repro.sharding.rules import init_params
+
+ARCH = "qwen2-0.5b"
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config(ARCH).reduced()
+    model = TransformerLM(cfg)
+    params = init_params(model.param_specs(), jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    batch = {"tokens": jnp.asarray(
+        rng.integers(1, cfg.vocab_size, (2, 8)))}
+    return cfg, model, params, batch
+
+
+def test_generate_shape_dtype_and_range(setup):
+    cfg, model, params, batch = setup
+    engine = ServeEngine(model)
+    out = engine.generate(params, batch, max_new_tokens=5)
+    assert out.shape == (2, 5)
+    assert out.dtype == batch["tokens"].dtype
+    toks = np.asarray(out)
+    assert ((toks >= 0) & (toks < cfg.vocab_size)).all()
+
+
+def test_generate_is_deterministic_and_reusable(setup):
+    _, model, params, batch = setup
+    engine = ServeEngine(model)
+    first = np.asarray(engine.generate(params, batch, max_new_tokens=4))
+    again = np.asarray(engine.generate(params, batch, max_new_tokens=4))
+    np.testing.assert_array_equal(first, again)
+
+
+def test_greedy_generate_matches_engine(setup):
+    _, model, params, batch = setup
+    engine_out = np.asarray(
+        ServeEngine(model).generate(params, batch, max_new_tokens=3))
+    fn_out = np.asarray(
+        greedy_generate(model, params, batch, max_new_tokens=3))
+    np.testing.assert_array_equal(engine_out, fn_out)
