@@ -19,6 +19,13 @@ records the trajectory in BENCH_chaos.json:
     must complete by re-planning on the shrunk healthy mesh instead of
     raising, produce a numerically correct spectrum, and record a
     "plan_downgrade" resilience event.
+  * **Corrupt-storm negative control** — the one storm this layer can
+    NOT absorb: ``kind="corrupt"`` rules perturb realized values after
+    every byte check has passed. Without ABFT verification the job
+    "succeeds" with silently wrong bytes and ZERO retries (proof the
+    CRC/replica machinery is blind to it); with ``verify="abft"`` the
+    same storm is detected and the output recovers bitwise. The full
+    defense gate is benchmarks/bench_verify.py (BENCH_verify.json).
 
 Wall times for the fault-free vs chaos runs are recorded un-gated (the
 chaos overhead is retry work by design, not a regression signal). The
@@ -74,7 +81,8 @@ COALESCE = 4
 MAX_RETRIES = 8
 
 
-def _run_job(store, out_dir: Path, injector) -> tuple[dict, bytes, float]:
+def _run_job(store, out_dir: Path, injector,
+             verify: str = "off") -> tuple[dict, bytes, float]:
     if out_dir.exists():
         shutil.rmtree(out_dir)  # fresh manifest: re-run every block
     cfg = JobConfig(readers=2, writers=2, coalesce=COALESCE, inflight=2,
@@ -83,7 +91,8 @@ def _run_job(store, out_dir: Path, injector) -> tuple[dict, bytes, float]:
     store.injector = injector
     t0 = time.monotonic()
     job = MapOnlyJob(store, out_dir, config=cfg, pipelined=True,
-                     transform=SegmentFFTTransform(FFT_LEN, impl=IMPL))
+                     transform=SegmentFFTTransform(FFT_LEN, impl=IMPL,
+                                                   verify=verify))
     stats = job.run()
     wall = time.monotonic() - t0
     merged = out_dir.parent / f"{out_dir.name}_merged.bin"
@@ -138,6 +147,42 @@ def _degrade_scenario() -> dict:
     }
 
 
+def _corrupt_scenario(work: Path) -> dict:
+    """The negative control: silent value corruption vs the byte checks.
+
+    Same store, same seeded ``kind="corrupt"`` storm at the post-realize
+    checkpoint, run twice — verify off (the storm must slip through every
+    CRC with zero retries) and verify="abft" (the checksum row must catch
+    it and the retry path must restore the clean bytes)."""
+    store, _ = make_signal_store(work / "in", size_mb=SIZE_MB // 2,
+                                 fft_len=FFT_LEN,
+                                 segments_per_block=SEGMENTS_PER_BLOCK)
+    num_blocks = len(store.blocks)
+    storm = FaultPlan.random(SEED, num_blocks, sites=("stream.realize",),
+                             rate=0.5, kind="corrupt")
+
+    _, clean_bytes, _ = _run_job(store, work / "clean", None)
+
+    inj_off = FaultInjector(storm)
+    stats_off, off_bytes, _ = _run_job(store, work / "corrupt_off", inj_off)
+
+    clear_events()
+    inj = FaultInjector(storm)
+    stats_abft, abft_bytes, _ = _run_job(store, work / "corrupt_abft", inj,
+                                         verify="abft")
+    return {
+        "blocks": num_blocks,
+        "corrupt_rules": len(storm.rules),
+        "off_corrupted": inj_off.total_corrupted,
+        "off_retries": stats_off.retries,
+        "off_silently_wrong": off_bytes != clean_bytes,
+        "abft_corrupted": inj.total_corrupted,
+        "abft_detected": len(events("verify_failed")),
+        "abft_retries": stats_abft.retries,
+        "abft_recovered_bitwise": abft_bytes == clean_bytes,
+    }
+
+
 def run(quick: bool = False):
     fft_api.clear_plan_cache()
     with tempfile.TemporaryDirectory() as tmp:
@@ -161,6 +206,8 @@ def run(quick: bool = False):
         chaos_stats, chaos_bytes, chaos_wall = _run_job(
             store, work / "out_chaos", injector=injector)
 
+        corrupt = _corrupt_scenario(work / "corrupt")
+
     raising = [r for r in plan.rules if r.site != "mesh.device"]
     faulted_blocks = {r.index for r in raising if r.index is not None}
     degrade = _degrade_scenario()
@@ -183,6 +230,14 @@ def run(quick: bool = False):
         "degrade_replan_completed": degrade["completed"],
         "degrade_output_correct": degrade["rel_err"] < 1e-4,
         "degrade_event_recorded": len(degrade["downgrade_events"]) >= 1,
+        # negative control: value corruption passes every byte check
+        # silently; only the ABFT invariants (DESIGN.md §13) catch it
+        "corrupt_silent_without_verify":
+            corrupt["off_corrupted"] >= 1 and corrupt["off_retries"] == 0
+            and corrupt["off_silently_wrong"],
+        "corrupt_caught_with_verify":
+            corrupt["abft_detected"] >= 1
+            and corrupt["abft_recovered_bitwise"],
     }
     doc = {
         "quick": quick,
@@ -204,6 +259,7 @@ def run(quick: bool = False):
                   "failed_blocks": chaos_stats.failed_blocks,
                   "injector": injector.summary(),
                   "store": store.stats.as_dict()},
+        "corrupt_control": corrupt,
         "degrade": degrade,
         "checks": checks,
     }
@@ -218,6 +274,11 @@ def run(quick: bool = False):
                     f"retries={chaos_stats.retries} "
                     f"fired={injector.total_fired} "
                     f"repairs={store.stats.repairs}"},
+        {"name": "chaos_corrupt_control", "us_per_call": 0.0,
+         "derived": f"off_wrong={corrupt['off_silently_wrong']} "
+                    f"off_retries={corrupt['off_retries']} "
+                    f"abft_detected={corrupt['abft_detected']} "
+                    f"abft_bitwise={corrupt['abft_recovered_bitwise']}"},
         {"name": "chaos_degrade", "us_per_call": degrade["replan_wall_s"]
             * 1e6,
          "derived": f"devices={degrade['mesh_devices']}->"

@@ -1,0 +1,430 @@
+"""ABFT silent-corruption gate: BENCH_verify.json (DESIGN.md §13).
+
+Every integrity layer below this one (block CRCs, replica SHA, the tile
+journal) checks BYTES — a value corrupted before the bytes are hashed is
+invisible to all of them. The ``corrupt`` fault kind injects exactly that:
+a seeded, deterministic perturbation at post-CRC checkpoints
+(``stream.realize`` host results, ``ooc.shuffle`` tile payloads,
+``serve.execute`` realized slices). This gate proves the ABFT invariants
+(`core/resilience/verify.py`) are the defense the CRCs cannot be:
+
+  * **Detection + bitwise recovery** — seeded corrupt storms over the
+    pipelined stream job, the out-of-core four-step, and the serving
+    front-end. With ``verify`` on, every storm run must (a) record
+    ``verify_failed`` detections, (b) quarantine-and-recompute through
+    the ONE retry path, and (c) end BITWISE IDENTICAL to the clean run /
+    oracle — detection without correct recovery is not recovery.
+  * **Negative control** — the SAME storms with ``verify="off"`` must
+    complete "successfully" with silently wrong bytes and zero retries:
+    proof the corruption is real and nothing else catches it.
+  * **Zero false positives** — clean (fault-free) runs across >= 20
+    seeds through the serving path plus the clean stream/ooc baselines:
+    no ``verify_failed`` event may fire on honest data. The derived
+    tolerances (eps- and depth-scaled) make this a sharp test.
+  * **Overhead** — the pipelined stream job on the shared deterministic
+    disk model (`ThrottledStore`, 250 MB/s): wall-clock with
+    ``verify="abft"`` must stay within 10% of ``verify="off"`` — the
+    O(n) invariants hide under O(n log n) compute and throttled I/O.
+    The planner's analytic ``verify_flops`` / ``verify_hbm_bytes`` /
+    ``verify_overhead`` are recorded alongside.
+
+impl="ref" everywhere a result is compared bitwise (batch-size-invariant
+rounding, same contract as bench_chaos/bench_outofcore).
+"""
+
+from __future__ import annotations
+
+import os
+
+_flags = os.environ.get("XLA_FLAGS", "")
+if "xla_force_host_platform_device_count" not in _flags:
+    os.environ["XLA_FLAGS"] = (
+        _flags + " --xla_force_host_platform_device_count=8").strip()
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import json  # noqa: E402
+import shutil  # noqa: E402
+import tempfile  # noqa: E402
+import time  # noqa: E402
+from pathlib import Path  # noqa: E402
+
+import numpy as np  # noqa: E402
+
+from benchmarks.common import make_signal_store  # noqa: E402
+from repro.core.fft.outofcore import reference_out_of_core  # noqa: E402
+from repro.core.pipeline import (JobConfig, MapOnlyJob,  # noqa: E402
+                                 SegmentFFTTransform)
+from repro.core.pipeline.blockstore import BlockStore  # noqa: E402
+from repro.core.pipeline.testing import DISK_MB_S, ThrottledStore  # noqa: E402
+from repro.core.resilience import (FaultInjector, FaultPlan,  # noqa: E402
+                                   clear_events, events)
+from repro.serve import FftService, loadgen  # noqa: E402
+import repro.fft as fft_api  # noqa: E402
+
+OUT_PATH = Path(__file__).resolve().parent.parent / "BENCH_verify.json"
+
+SEED = 1407
+IMPL = "ref"
+FFT_LEN = 512
+SEGMENTS_PER_BLOCK = 256   # 1 MB blocks
+SIZE_MB = 8                # -> 8 blocks
+COALESCE = 4
+MAX_RETRIES = 6
+CORRUPT_RATE = 0.5         # per-block corrupt probability in the storms
+CLEAN_SEEDS = 20           # false-positive sweep
+OVERHEAD_BUDGET = 0.10
+
+
+# --------------------------------------------------------------- stream
+
+def _stream_job(store, out_dir: Path, injector, verify: str):
+    if out_dir.exists():
+        shutil.rmtree(out_dir)
+    cfg = JobConfig(readers=2, writers=2, coalesce=COALESCE, inflight=2,
+                    speculation=False, poll_interval_s=0.005,
+                    max_retries=MAX_RETRIES, injector=injector)
+    store.injector = injector
+    t0 = time.monotonic()
+    job = MapOnlyJob(store, out_dir, config=cfg, pipelined=True,
+                     transform=SegmentFFTTransform(FFT_LEN, impl=IMPL,
+                                                   verify=verify))
+    stats = job.run()
+    wall = time.monotonic() - t0
+    merged = out_dir.parent / f"{out_dir.name}_merged.bin"
+    job.merge(merged)
+    return stats, merged.read_bytes(), wall
+
+
+def _stream_scenario(work: Path) -> dict:
+    store, _ = make_signal_store(work / "in", size_mb=SIZE_MB,
+                                 fft_len=FFT_LEN,
+                                 segments_per_block=SEGMENTS_PER_BLOCK)
+    num_blocks = len(store.blocks)
+    storm = FaultPlan.random(SEED, num_blocks, sites=("stream.realize",),
+                             rate=CORRUPT_RATE, kind="corrupt")
+
+    clear_events()
+    _, clean_abft, _ = _stream_job(store, work / "clean_abft", None, "abft")
+    clean_fp = len(events("verify_failed"))
+
+    clear_events()
+    inj = FaultInjector(storm)
+    stats, storm_bytes, _ = _stream_job(store, work / "storm_abft", inj,
+                                        "abft")
+    detected = len(events("verify_failed"))
+
+    _, clean_off, _ = _stream_job(store, work / "clean_off", None, "off")
+    inj_off = FaultInjector(storm)
+    stats_off, storm_off, _ = _stream_job(store, work / "storm_off",
+                                          inj_off, "off")
+    return {
+        "blocks": num_blocks,
+        "corrupt_rules": len(storm.rules),
+        "corrupted": inj.total_corrupted,
+        "detected": detected,
+        "retries": stats.retries,
+        "failed_blocks": stats.failed_blocks,
+        "clean_false_positives": clean_fp,
+        "recovered_bitwise": storm_bytes == clean_abft,
+        "off_corrupted": inj_off.total_corrupted,
+        "off_retries": stats_off.retries,
+        "off_silently_wrong": storm_off != clean_off,
+    }
+
+
+# ----------------------------------------------------------- out-of-core
+
+def _ooc_run(work: Path, sig, n: int, budget: int, injector,
+             verify: str) -> tuple:
+    f = fft_api.factor_out_of_core(n, budget)
+    store = BlockStore(work / "in", block_bytes=f.pass1_panel_bytes)
+    store.put_bytes(sig.tobytes())
+    cfg = JobConfig(readers=2, writers=2, inflight=2, speculation=False,
+                    max_retries=MAX_RETRIES, injector=injector)
+    plan = fft_api.plan(kind="c2c", n=n, placement="out_of_core",
+                        store=store, work_dir=work / "ooc", impl=IMPL,
+                        budget_bytes=budget, job_config=cfg, verify=verify)
+    stats = plan.execute()
+    merged = work / "merged.bin"
+    plan.merge(merged)
+    return plan, stats, merged.read_bytes()
+
+
+def _ooc_scenario(work: Path, quick: bool) -> dict:
+    n = 1 << (12 if quick else 14)
+    budget = (8 * n) // 4
+    f = fft_api.factor_out_of_core(n, budget)
+    rng = np.random.default_rng(SEED)
+    sig = rng.standard_normal((n, 2)).astype(np.float32)
+    oracle = reference_out_of_core(sig, f, impl=IMPL)
+
+    # storm across BOTH post-CRC checkpoints: tile payloads (pre-journal,
+    # so the CRCs bless the corrupt bytes) and realized pass outputs
+    tile_rules = FaultPlan.random(SEED, f.tiles, sites=("ooc.shuffle",),
+                                  rate=0.25, kind="corrupt")
+    panel_rules = FaultPlan.random(SEED + 1, max(f.pass1_jobs, f.pass2_jobs),
+                                   sites=("stream.realize",),
+                                   rate=0.25, kind="corrupt")
+    storm = FaultPlan(tile_rules.rules + panel_rules.rules)
+
+    clear_events()
+    _, _, clean_bytes = _ooc_run(work / "clean", sig, n, budget, None,
+                                 "parseval")
+    clean_fp = len(events("verify_failed"))
+
+    clear_events()
+    inj = FaultInjector(storm)
+    _, stats, storm_bytes = _ooc_run(work / "storm", sig, n, budget, inj,
+                                     "parseval")
+    detected = len(events("verify_failed"))
+    sites = sorted({e.get("site") for e in events("verify_failed")})
+
+    inj_off = FaultInjector(storm)
+    _, stats_off, off_bytes = _ooc_run(work / "off", sig, n, budget,
+                                       inj_off, "off")
+    retries = stats.pass1.retries + stats.pass2.retries
+    return {
+        "n": n, "tiles": f.tiles,
+        "corrupt_rules": len(storm.rules),
+        "corrupted": inj.total_corrupted,
+        "detected": detected,
+        "detected_sites": sites,
+        "retries": retries,
+        "clean_false_positives": clean_fp,
+        "clean_bitwise_equals_oracle": clean_bytes == oracle,
+        "recovered_bitwise": storm_bytes == oracle,
+        "off_corrupted": inj_off.total_corrupted,
+        "off_retries": stats_off.pass1.retries + stats_off.pass2.retries,
+        "off_silently_wrong": off_bytes != oracle,
+    }
+
+
+# ----------------------------------------------------------------- serve
+
+class _Shape:
+    kind = "c2c"
+    n = FFT_LEN
+    rows = 2
+
+
+def _serve_run(reqs, verify: str, injector, seed: int) -> tuple:
+    fft_api.clear_plan_cache()
+    svc = FftService(impl=IMPL, coalesce=COALESCE, queue_depth=256,
+                     max_batch_delay_s=0.001, injector=injector,
+                     verify=verify)
+    tickets = [svc.submit("c2c", xr, xi) for xr, xi in reqs]
+    for t in tickets:
+        t.wait(60)
+    svc.close(drain=True)
+    return svc, tickets
+
+
+def _serve_requests(seed: int, count: int = 16):
+    rng = np.random.default_rng(seed)
+    return [tuple(rng.standard_normal((_Shape.rows, _Shape.n))
+                  .astype(np.float32) for _ in range(2))
+            for _ in range(count)]
+
+
+def _serve_bitwise(tickets, reqs) -> bool:
+    for t, ops in zip(tickets, reqs):
+        if t.error is not None:
+            return False
+        want = loadgen.oracle(_Shape, ops, impl=IMPL,
+                              batch_rows=t.batch_rows)
+        for g, w in zip(t.value, want):
+            if np.asarray(g).tobytes() != np.asarray(w).tobytes():
+                return False
+    return True
+
+
+def _serve_scenario() -> dict:
+    reqs = _serve_requests(SEED)
+    storm = FaultPlan.random(SEED, len(reqs), sites=("serve.execute",),
+                             rate=CORRUPT_RATE, kind="corrupt")
+
+    clear_events()
+    inj = FaultInjector(storm)
+    svc, tickets = _serve_run(reqs, "abft", inj, SEED)
+    detected = len(events("verify_failed"))
+
+    inj_off = FaultInjector(storm)
+    svc_off, tk_off = _serve_run(reqs, "off", inj_off, SEED)
+    off_wrong = sum(
+        1 for t, ops in zip(tk_off, reqs)
+        if t.error is None and any(
+            np.asarray(g).tobytes() != np.asarray(w).tobytes()
+            for g, w in zip(t.value, loadgen.oracle(
+                _Shape, ops, impl=IMPL, batch_rows=t.batch_rows))))
+    return {
+        "requests": len(reqs),
+        "corrupt_rules": len(storm.rules),
+        "corrupted": inj.total_corrupted,
+        "detected": detected,
+        "stats_detected": svc.stats.corruption_detected,
+        "stats_recomputed": svc.stats.corruption_recomputed,
+        "retries": svc.stats.retries,
+        "all_completed": all(t.error is None for t in tickets),
+        "recovered_bitwise": _serve_bitwise(tickets, reqs),
+        "off_corrupted": inj_off.total_corrupted,
+        "off_retries": svc_off.stats.retries,
+        "off_silently_wrong_requests": off_wrong,
+    }
+
+
+def _false_positive_sweep() -> dict:
+    """>= CLEAN_SEEDS clean serve runs under verify="abft": the derived
+    tolerances must never trip on honest data."""
+    clear_events()
+    fp = 0
+    for seed in range(CLEAN_SEEDS):
+        svc, tickets = _serve_run(_serve_requests(seed, count=8), "abft",
+                                  None, seed)
+        fp += svc.stats.corruption_detected
+        fp += sum(1 for t in tickets if t.error is not None)
+    return {"seeds": CLEAN_SEEDS, "false_positives": fp,
+            "verify_failed_events": len(events("verify_failed"))}
+
+
+# -------------------------------------------------------------- overhead
+
+def _overhead(work: Path, iters: int = 5) -> dict:
+    """Wall-clock cost of verification on the deterministic disk model:
+    the same throttled store, pipelined job with verify off vs abft.
+    Each mode is warmed once (plan builds don't bill to either side) and
+    then timed ``iters`` times; the medians are compared — single-run
+    walls at this size are thread-scheduling noisy (+-30%)."""
+    store, _ = make_signal_store(work / "in", size_mb=SIZE_MB,
+                                 fft_len=FFT_LEN,
+                                 segments_per_block=SEGMENTS_PER_BLOCK)
+    store = ThrottledStore.open(store.root)
+    walls = {}
+    for mode in ("off", "abft"):
+        _stream_job(store, work / f"warm_{mode}", None, mode)
+        runs = []
+        for i in range(iters):
+            _, _, w = _stream_job(store, work / f"timed_{mode}_{i}",
+                                  None, mode)
+            runs.append(w)
+        walls[mode] = float(np.median(runs))
+    rel = walls["abft"] / walls["off"] - 1.0 if walls["off"] else 0.0
+
+    # the planner's analytic attribution for the launch shape this job used
+    rows = COALESCE * SEGMENTS_PER_BLOCK
+    p = fft_api.plan(kind="c2c", n=FFT_LEN, batch_shape=(rows + 1,),
+                     impl=IMPL, verify="abft")
+    return {
+        "disk_model_mb_s": DISK_MB_S,
+        "wall_off_s": round(walls["off"], 4),
+        "wall_abft_s": round(walls["abft"], 4),
+        "overhead_frac": round(rel, 4),
+        "model": {"verify_flops": p.verify_flops,
+                  "verify_hbm_bytes": p.verify_hbm_bytes,
+                  "verify_overhead_flops_frac": round(p.verify_overhead, 4)},
+    }
+
+
+# ------------------------------------------------------------------ main
+
+def run(quick: bool = False):
+    fft_api.clear_plan_cache()
+    with tempfile.TemporaryDirectory() as tmp:
+        work = Path(tmp)
+        stream = _stream_scenario(work / "stream")
+        ooc = _ooc_scenario(work / "ooc", quick)
+        serve = _serve_scenario()
+        sweep = _false_positive_sweep()
+        overhead = _overhead(work / "overhead")
+
+    checks = {
+        # detection + bitwise recovery on every execution path
+        "stream_storm_detected":
+            stream["corrupted"] >= 1 and stream["detected"] >= 1,
+        "stream_recovered_bitwise": stream["recovered_bitwise"],
+        "stream_no_failed_blocks": not stream["failed_blocks"],
+        "ooc_storm_detected":
+            ooc["corrupted"] >= 2 and ooc["detected"] >= 2,
+        "ooc_recovered_bitwise": ooc["recovered_bitwise"],
+        "ooc_clean_bitwise": ooc["clean_bitwise_equals_oracle"],
+        "serve_storm_detected":
+            serve["corrupted"] >= 1 and serve["detected"] >= 1
+            and serve["stats_recomputed"] >= 1,
+        "serve_recovered_bitwise": serve["recovered_bitwise"],
+        # the negative control: without verify the SAME storms pass every
+        # byte-level check and deliver wrong answers with zero retries
+        "off_is_silently_wrong":
+            stream["off_silently_wrong"] and ooc["off_silently_wrong"]
+            and serve["off_silently_wrong_requests"] >= 1,
+        "off_nothing_else_caught_it":
+            stream["off_retries"] == 0 and ooc["off_retries"] == 0
+            and serve["off_retries"] == 0,
+        # zero false positives across the clean sweeps
+        "no_false_positives":
+            sweep["false_positives"] == 0
+            and sweep["verify_failed_events"] == 0
+            and stream["clean_false_positives"] == 0
+            and ooc["clean_false_positives"] == 0,
+        # verification hides under throttled I/O + transform compute
+        "overhead_within_10pct":
+            overhead["overhead_frac"] < OVERHEAD_BUDGET,
+    }
+    doc = {
+        "quick": quick,
+        "config": {"seed": SEED, "impl": IMPL, "fft_len": FFT_LEN,
+                   "size_mb": SIZE_MB, "coalesce": COALESCE,
+                   "corrupt_rate": CORRUPT_RATE,
+                   "clean_seeds": CLEAN_SEEDS,
+                   "overhead_budget": OVERHEAD_BUDGET},
+        "stream": stream,
+        "ooc": ooc,
+        "serve": serve,
+        "false_positive_sweep": sweep,
+        "overhead": overhead,
+        "checks": checks,
+    }
+    OUT_PATH.write_text(json.dumps(doc, indent=1))
+
+    rows = [
+        {"name": "verify_stream_storm", "us_per_call": 0.0,
+         "derived": f"corrupted={stream['corrupted']} "
+                    f"detected={stream['detected']} "
+                    f"retries={stream['retries']} "
+                    f"bitwise={stream['recovered_bitwise']}"},
+        {"name": "verify_ooc_storm", "us_per_call": 0.0,
+         "derived": f"corrupted={ooc['corrupted']} "
+                    f"detected={ooc['detected']} "
+                    f"sites={'+'.join(ooc['detected_sites'])} "
+                    f"bitwise={ooc['recovered_bitwise']}"},
+        {"name": "verify_serve_storm", "us_per_call": 0.0,
+         "derived": f"corrupted={serve['corrupted']} "
+                    f"detected={serve['detected']} "
+                    f"recomputed={serve['stats_recomputed']} "
+                    f"bitwise={serve['recovered_bitwise']}"},
+        {"name": "verify_overhead",
+         "us_per_call": overhead["wall_abft_s"] * 1e6,
+         "derived": f"off={overhead['wall_off_s']}s "
+                    f"abft={overhead['wall_abft_s']}s "
+                    f"frac={overhead['overhead_frac']}"},
+        {"name": "verify_checks", "us_per_call": 0.0,
+         "derived": " ".join(f"{k}={'PASS' if ok else 'FAIL'}"
+                             for k, ok in checks.items())},
+    ]
+    return rows
+
+
+def main(argv=None) -> int:
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args(argv)
+    for row in run(quick=args.quick):
+        print(f"{row['name']},{row['us_per_call']:.1f},\"{row['derived']}\"")
+    checks = json.loads(OUT_PATH.read_text())["checks"]
+    if not all(checks.values()):
+        print(f"FAIL: {checks}")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -78,7 +78,8 @@ from repro.core.pipeline.maponly import (FAILED, PENDING, JobConfig,
 from repro.core.pipeline.records import block_of_segments
 from repro.core.pipeline.stream import Decoded, StagingPool, StreamExecutor, \
     StreamTransform
-from repro.core.resilience.faults import maybe_fire
+from repro.core.resilience import verify as abft
+from repro.core.resilience.faults import maybe_corrupt, maybe_fire
 from repro.kernels.fft import plan as kplan
 
 _C64 = 8  # bytes per interleaved complex64 sample
@@ -267,12 +268,20 @@ def _apply_twiddle(yr: np.ndarray, yi: np.ndarray, j2_start: int,
 
 
 class TileJournal:
-    """Append-only (torn-tail tolerant) CRC journal for shuffle tiles."""
+    """Append-only (torn-tail tolerant) CRC journal for shuffle tiles.
+
+    Under ``verify`` modes each record also carries the per-tile ENERGY
+    (float64 sum of squares) measured just before the bytes were CRC'd —
+    the ABFT side-channel: a CRC only proves the bytes on disk are the
+    bytes that were written, the journaled energy lets pass 2 prove the
+    values are the values pass 1 computed.
+    """
 
     def __init__(self, path: os.PathLike):
         self.path = Path(path)
         self._lock = threading.Lock()
         self._crcs: dict[str, str] = {}
+        self._energies: dict[str, float] = {}
         if self.path.exists():
             for line in self.path.read_text().splitlines():
                 if not line.strip():
@@ -282,18 +291,29 @@ class TileJournal:
                 except json.JSONDecodeError:
                     break  # torn tail from a crash mid-append
                 self._crcs.update(rec.get("crcs", {}))
+                self._energies.update(rec.get("energies", {}))
 
-    def record(self, job: int, crcs: dict[str, str]) -> None:
+    def record(self, job: int, crcs: dict[str, str],
+               energies: dict[str, float] | None = None) -> None:
+        rec: dict = {"job": job, "crcs": crcs}
+        if energies:
+            rec["energies"] = energies
         with self._lock:
             with open(self.path, "a") as f:
-                f.write(json.dumps({"job": job, "crcs": crcs}) + "\n")
+                f.write(json.dumps(rec) + "\n")
                 f.flush()
                 os.fsync(f.fileno())
             self._crcs.update(crcs)
+            if energies:
+                self._energies.update(energies)
 
     def crc(self, name: str) -> str | None:
         with self._lock:
             return self._crcs.get(name)
+
+    def energy(self, name: str) -> float | None:
+        with self._lock:
+            return self._energies.get(name)
 
 
 def _tile_name(r: int, c: int) -> str:
@@ -334,12 +354,13 @@ class _Pass1Store:
     shuffle."""
 
     def __init__(self, store: BlockStore, f: OocPlan, journal: TileJournal,
-                 io: _IoCounter, injector=None):
+                 io: _IoCounter, injector=None, verify: str = "off"):
         self.store = store
         self.f = f
         self.journal = journal
         self.io = io
         self.injector = injector
+        self.verify = abft.check_mode(verify)
         panel = f.pass1_panel_bytes
         if store.total_bytes != f.operand_bytes:
             raise ValueError(
@@ -369,17 +390,36 @@ class _Pass1Store:
         out.mkdir(parents=True, exist_ok=True)
         panel = np.frombuffer(data, np.float32).reshape(f.t2, f.n1, 2)
         crcs = {}
+        energies: dict[str, float] = {}
+        e_panel = abft.energy(panel) if self.verify != "off" else None
         for r in range(f.pass2_jobs):
-            maybe_fire(self.injector, "ooc.shuffle",
-                       r * f.pass1_jobs + index)
+            tid = r * f.pass1_jobs + index
+            maybe_fire(self.injector, "ooc.shuffle", tid)
             tile = np.ascontiguousarray(
                 panel[:, r * f.t1:(r + 1) * f.t1].transpose(1, 0, 2))
+            # silent-corruption checkpoint: a hit perturbs the tile BEFORE
+            # the CRC is taken, so the journal faithfully records the
+            # corrupt bytes — only the energy invariant below can tell
+            (tile,), _ = maybe_corrupt(self.injector, "ooc.shuffle", tid,
+                                       [tile])
             blob = tile.tobytes()
             name = _tile_name(r, index)
             _atomic_write(out / name, blob)
             crcs[name] = _crc(blob)
+            if self.verify != "off":
+                energies[name] = abft.energy(tile)
             self.io.add("shuffle_write", len(blob))
-        self.journal.record(index, crcs)
+        if self.verify != "off":
+            # scatter is a pure rearrangement: the tiles' energies must
+            # resum to the panel's (float64, positive terms — no
+            # cancellation), so the tolerance is summation-order noise,
+            # far tighter than the FFT Parseval bound
+            e_tiles = math.fsum(energies.values())
+            tol = 1e-9 * (e_panel + 1e-30)
+            if abs(e_tiles - e_panel) > tol:
+                raise abft.fail("ooc.shuffle", index, check="scatter_energy",
+                                expected=e_panel, got=e_tiles, tol=tol)
+        self.journal.record(index, crcs, energies or None)
 
 
 class _Pass1Transform(StreamTransform):
@@ -389,9 +429,10 @@ class _Pass1Transform(StreamTransform):
     one), twiddled in the same streamed job, encoded for the shuffle
     scatter."""
 
-    def __init__(self, f: OocPlan, impl: str):
+    def __init__(self, f: OocPlan, impl: str, verify: str = "off"):
         self.f = f
         self.impl = impl
+        self.verify = abft.check_mode(verify)
         self._pool: StagingPool | None = None
 
     def open(self, pool_capacity: int, stop: threading.Event) -> None:
@@ -403,8 +444,10 @@ class _Pass1Transform(StreamTransform):
     def decode(self, data: bytes, index: int) -> Decoded:
         inter = np.frombuffer(data, np.float32).reshape(self.f.t2,
                                                         self.f.n1, 2)
+        e_in = abft.energy(inter) if self.verify != "off" else None
         return Decoded(index, (inter[..., 0], inter[..., 1]),
-                       rows=self.f.t2, key=None)  # one job per launch
+                       rows=self.f.t2, key=None,  # one job per launch
+                       energy=e_in)
 
     def gather(self, group):
         (d,) = group
@@ -425,7 +468,8 @@ class _Pass1Transform(StreamTransform):
         import repro.fft as fft_api
         re_b, im_b = batch
         p = fft_api.plan(kind="c2c", n=self.f.n1,
-                         batch_shape=(self.f.t2,), impl=self.impl)
+                         batch_shape=(self.f.t2,), impl=self.impl,
+                         verify=self.verify)
         return p.execute_async(re_b, im_b, donate=True), batch
 
     def realize(self, handle):
@@ -438,6 +482,15 @@ class _Pass1Transform(StreamTransform):
     def discard(self, batch) -> None:
         if self._pool is not None:
             self._pool.release(batch[0].shape, batch)
+
+    def verify_member(self, host, row0: int, d: Decoded) -> None:
+        # Parseval over the realized panel: the pre-twiddle FFT output
+        # must carry n1 x the input energy recorded at decode
+        if self.verify == "off" or d.energy is None:
+            return
+        yr, yi = host
+        abft.check_parseval(d.energy, abft.energy(yr, yi), self.f.n1,
+                            "f32", site="ooc.pass1", index=d.index)
 
     def encode(self, host, row0: int, d: Decoded) -> bytes:
         # the global twiddle W_n^{j2*k1}, applied in the same streamed job
@@ -458,12 +511,14 @@ class _Pass2Store:
     so the standard offset-ordered getmerge concatenation applies)."""
 
     def __init__(self, inter_dir: os.PathLike, f: OocPlan,
-                 journal: TileJournal, io: _IoCounter, injector=None):
+                 journal: TileJournal, io: _IoCounter, injector=None,
+                 verify: str = "off"):
         self.inter = Path(inter_dir)
         self.f = f
         self.journal = journal
         self.io = io
         self.injector = injector
+        self.verify = abft.check_mode(verify)
 
     def read_block(self, index: int) -> bytes:
         f = self.f
@@ -479,8 +534,20 @@ class _Pass2Store:
                     f"shuffle tile {name} failed its journaled CRC "
                     f"(pass-2 job {index})")
             self.io.add("shuffle_read", len(blob))
-            tiles.append(np.frombuffer(blob, np.float32).reshape(
-                f.t1, f.t2, 2))
+            tile = np.frombuffer(blob, np.float32).reshape(f.t1, f.t2, 2)
+            if self.verify != "off":
+                # re-measure the ABFT side-channel: the tile's energy must
+                # match what pass 1 journaled (same values, same float64
+                # reduction — summation-order noise only)
+                want_e = self.journal.energy(name)
+                if want_e is not None:
+                    got_e = abft.energy(tile)
+                    tol = 1e-9 * (want_e + 1e-30)
+                    if abs(got_e - want_e) > tol:
+                        raise abft.fail("ooc.pass2", index,
+                                        check="tile_energy", tile=name,
+                                        expected=want_e, got=got_e, tol=tol)
+            tiles.append(tile)
         return np.concatenate(tiles, axis=1).tobytes()
 
     def write_output_block(self, out_dir: os.PathLike, index: int,
@@ -497,9 +564,10 @@ class _Pass2Transform(StreamTransform):
     """Streamed pass 2: batched length-n2 FFT of each (t1, n2) panel; the
     result rows ARE final spectrum rows (transposed order), no twiddle."""
 
-    def __init__(self, f: OocPlan, impl: str):
+    def __init__(self, f: OocPlan, impl: str, verify: str = "off"):
         self.f = f
         self.impl = impl
+        self.verify = abft.check_mode(verify)
         self._pool: StagingPool | None = None
 
     def open(self, pool_capacity: int, stop: threading.Event) -> None:
@@ -511,8 +579,9 @@ class _Pass2Transform(StreamTransform):
     def decode(self, data: bytes, index: int) -> Decoded:
         inter = np.frombuffer(data, np.float32).reshape(self.f.t1,
                                                         self.f.n2, 2)
+        e_in = abft.energy(inter) if self.verify != "off" else None
         return Decoded(index, (inter[..., 0], inter[..., 1]),
-                       rows=self.f.t1, key=None)
+                       rows=self.f.t1, key=None, energy=e_in)
 
     def gather(self, group):
         (d,) = group
@@ -533,7 +602,8 @@ class _Pass2Transform(StreamTransform):
         import repro.fft as fft_api
         re_b, im_b = batch
         p = fft_api.plan(kind="c2c", n=self.f.n2,
-                         batch_shape=(self.f.t1,), impl=self.impl)
+                         batch_shape=(self.f.t1,), impl=self.impl,
+                         verify=self.verify)
         return p.execute_async(re_b, im_b, donate=True), batch
 
     def realize(self, handle):
@@ -546,6 +616,13 @@ class _Pass2Transform(StreamTransform):
     def discard(self, batch) -> None:
         if self._pool is not None:
             self._pool.release(batch[0].shape, batch)
+
+    def verify_member(self, host, row0: int, d: Decoded) -> None:
+        if self.verify == "off" or d.energy is None:
+            return
+        yr, yi = host
+        abft.check_parseval(d.energy, abft.energy(yr, yi), self.f.n2,
+                            "f32", site="ooc.pass2", index=d.index)
 
     def encode(self, host, row0: int, d: Decoded) -> bytes:
         return block_of_segments(*host)
@@ -596,10 +673,16 @@ class OutOfCorePlan:
 
     def __init__(self, factors: OocPlan, store: BlockStore,
                  work_dir: os.PathLike, impl: str = "ref",
-                 config: JobConfig | None = None):
+                 config: JobConfig | None = None, verify: str = "off"):
         self.factors = factors
         self.store = store
         self.impl = impl
+        # "abft" on the out-of-core path adds nothing over "parseval":
+        # panels launch as single uniform jobs (no coalesced groups to
+        # disambiguate), so both modes run the energy-invariant chain —
+        # decode energy -> realize Parseval -> scatter conservation ->
+        # journaled tile energies -> pass-2 re-checks
+        self.verify = abft.check_mode(verify)
         self.work_dir = Path(work_dir)
         self.work_dir.mkdir(parents=True, exist_ok=True)
         self.tiles_dir = self.work_dir / "tiles"
@@ -647,15 +730,15 @@ class OutOfCorePlan:
         f = self.factors
         if which == 1:
             store = _Pass1Store(self.store, f, self.journal, self.io,
-                                self.injector)
-            transform = _Pass1Transform(f, self.impl)
+                                self.injector, verify=self.verify)
+            transform = _Pass1Transform(f, self.impl, verify=self.verify)
             manifest = Manifest(self.work_dir / "pass1_manifest.json",
                                 f.pass1_jobs)
             out_dir = self.tiles_dir
         else:
             store = _Pass2Store(self.tiles_dir, f, self.journal, self.io,
-                                self.injector)
-            transform = _Pass2Transform(f, self.impl)
+                                self.injector, verify=self.verify)
+            transform = _Pass2Transform(f, self.impl, verify=self.verify)
             manifest = Manifest(self.work_dir / "pass2_manifest.json",
                                 f.pass2_jobs)
             out_dir = self.out_dir
@@ -725,11 +808,13 @@ class OutOfCorePlan:
 
 def plan_out_of_core(n: int, store: BlockStore, work_dir: os.PathLike,
                      budget_bytes: int, impl: str = "ref",
-                     config: JobConfig | None = None) -> OutOfCorePlan:
+                     config: JobConfig | None = None,
+                     verify: str = "off") -> OutOfCorePlan:
     """Factor + bind: the `placement="out_of_core"` entry point."""
     factors = factor_out_of_core(n, budget_bytes,
                                  block_bytes=store.block_bytes)
-    return OutOfCorePlan(factors, store, work_dir, impl=impl, config=config)
+    return OutOfCorePlan(factors, store, work_dir, impl=impl, config=config,
+                         verify=verify)
 
 
 # ---------------------------------------------------------------------------

@@ -34,7 +34,7 @@ from statistics import median
 from typing import Callable
 
 from repro.core.pipeline.blockstore import BlockStore
-from repro.core.resilience.faults import maybe_fire
+from repro.core.resilience.faults import maybe_corrupt_bytes, maybe_fire
 from repro.core.resilience.retry import RetryPolicy
 
 PENDING, RUNNING, DONE, FAILED = "PENDING", "RUNNING", "DONE", "FAILED"
@@ -60,6 +60,11 @@ class JobConfig:
     # coordinator/dispatcher thread through policy.sleep (injectable).
     retry: RetryPolicy | None = None
     injector: object = None  # FaultInjector for deterministic chaos runs
+    # ABFT hook for the serial path (DESIGN.md §13): called as
+    # verify_fn(block_bytes_in, out_bytes, index) after the map function
+    # (and after the corruption checkpoint); raise SilentCorruption to
+    # quarantine the attempt back into the retry budget. None = no check.
+    verify_fn: Callable | None = None
 
     def retry_policy(self) -> RetryPolicy:
         return self.retry or RetryPolicy(max_attempts=self.max_retries)
@@ -227,6 +232,12 @@ class MapOnlyJob:
         maybe_fire(self.cfg.injector, "maponly.attempt", index)
         data = self.store.read_block(index)
         out = self.map_fn(data, index)
+        # silent-corruption checkpoint: past the CRC-verified read and the
+        # map function, so only the ABFT verify hook below can see it
+        out = maybe_corrupt_bytes(self.cfg.injector, "maponly.attempt",
+                                  index, out)
+        if self.cfg.verify_fn is not None:
+            self.cfg.verify_fn(data, out, index)
         self.store.write_output_block(self.out_dir, index, out)
         return index, time.monotonic() - t0
 

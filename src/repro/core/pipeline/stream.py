@@ -55,7 +55,9 @@ from repro.core.pipeline.blockstore import BlockStore
 from repro.core.pipeline.maponly import (DONE, FAILED, PENDING, RUNNING,
                                          JobConfig, JobStats, Manifest)
 from repro.core.pipeline.records import block_of_segments
-from repro.core.resilience.faults import maybe_fire
+from repro.core.resilience import verify as abft
+from repro.core.resilience.faults import (corrupt_salt, maybe_fire,
+                                          perturb_array)
 
 STAGES = ("read", "h2d", "compute", "d2h", "write")
 
@@ -124,6 +126,8 @@ class Decoded:
     arrays: tuple          # host views consumed by gather()/launch()
     rows: int              # batch rows this block contributes
     key: Any               # coalesce group key (None = never coalesce)
+    energy: float | None = None  # input energy at decode (CRC-clean
+    #                              bytes), consumed by the Parseval check
 
 
 class StreamTransform:
@@ -159,6 +163,16 @@ class StreamTransform:
 
     def close(self) -> None:
         """Called once when streaming ends (release pools/executors)."""
+
+    def verify_group(self, host, group: list[Decoded]) -> None:
+        """ABFT invariants over a whole realized batch (e.g. the linearity
+        checksum row). Runs on writeback workers AFTER the corruption
+        checkpoint; raising `SilentCorruption` quarantines every member
+        back into the retry path."""
+
+    def verify_member(self, host, row0: int, d: Decoded) -> None:
+        """Per-block invariant (e.g. Parseval vs the energy recorded at
+        decode). Raising quarantines just this member."""
 
     def encode(self, host, row0: int, d: Decoded) -> bytes:
         raise NotImplementedError
@@ -244,13 +258,26 @@ class SegmentFFTTransform(StreamTransform):
     device is provably done with it — this is what makes `donate=True`
     (and JAX CPU's zero-copy host-buffer aliasing) safe: the memory is
     never rewritten while a launched batch may still read or own it.
+
+    ``verify`` (DESIGN.md §13): "parseval" records each block's input
+    energy at decode (the bytes are CRC-clean there) and checks the
+    realized spectrum's energy against it per member — detection
+    localizes to one block, so only that block retries. "abft" instead
+    appends ONE seeded checksum row to every gathered batch — its
+    transform must equal the weighted combination of the batch rows'
+    transforms (linearity), checked group-wide before encode; it catches
+    corruption the energy check cannot (e.g. permutations) at the cost
+    of group-granular quarantine. The extra row rides the same two plans
+    per key (full -> rows+1, tail -> tail+1), so the <=2-plans-per-key
+    coalescing property is preserved.
     """
 
     def __init__(self, fft_len: int, impl: str = "matfft",
-                 donate: bool = True):
+                 donate: bool = True, verify: str = "off"):
         self.fft_len = fft_len
         self.impl = impl
         self.donate = donate
+        self.verify = abft.check_mode(verify)
         self._pool: StagingPool | None = None
 
     def open(self, pool_capacity: int, stop: threading.Event) -> None:
@@ -266,20 +293,32 @@ class SegmentFFTTransform(StreamTransform):
         shape = inter.shape[:2]
         # views, not copies: the block bytes waiting in the decode queue
         # ARE the prefetch buffer; the deinterleave happens in gather
+        # decode energy feeds the per-member Parseval check; in abft mode
+        # the group checksum row is the (stronger) invariant, so skip the
+        # per-member energy passes entirely — they were the dominant
+        # verification cost (one full read of every plane, twice)
+        e_in = abft.energy(flat) if self.verify == "parseval" else None
         return Decoded(index, (inter[..., 0], inter[..., 1]),
-                       rows=shape[0], key=shape)
+                       rows=shape[0], key=shape, energy=e_in)
 
     def gather(self, group: list[Decoded]):
         rows = sum(d.rows for d in group)
-        shape = (rows, self.fft_len)
+        extra = 1 if self.verify == "abft" else 0
+        shape = (rows + extra, self.fft_len)
         if self._pool is not None:
             re_b, im_b = self._pool.acquire(shape)
         else:  # transform used outside an executor (tests)
             re_b = np.empty(shape, np.float32)
             im_b = np.empty(shape, np.float32)
         try:
-            np.concatenate([d.arrays[0] for d in group], axis=0, out=re_b)
-            np.concatenate([d.arrays[1] for d in group], axis=0, out=im_b)
+            np.concatenate([d.arrays[0] for d in group], axis=0,
+                           out=re_b[:rows])
+            np.concatenate([d.arrays[1] for d in group], axis=0,
+                           out=im_b[:rows])
+            if extra:
+                w = abft.checksum_weights(rows, seed=rows)
+                re_b[rows] = w @ re_b[:rows]
+                im_b[rows] = w @ im_b[:rows]
         except BaseException:  # never leak the acquired set
             self.discard((re_b, im_b))
             raise
@@ -289,7 +328,8 @@ class SegmentFFTTransform(StreamTransform):
         import repro.fft as fft_api
         re_b, im_b = batch
         p = fft_api.plan(kind="c2c", n=self.fft_len,
-                         batch_shape=re_b.shape[:-1], impl=self.impl)
+                         batch_shape=re_b.shape[:-1], impl=self.impl,
+                         verify=self.verify)
         return p.execute_async(re_b, im_b, donate=self.donate), batch
 
     def realize(self, handle):
@@ -305,6 +345,23 @@ class SegmentFFTTransform(StreamTransform):
     def discard(self, batch) -> None:
         if self._pool is not None:  # device done -> staging reusable
             self._pool.release(batch[0].shape, batch)
+
+    def verify_group(self, host, group: list[Decoded]) -> None:
+        if self.verify != "abft":
+            return
+        rows = sum(d.rows for d in group)
+        w = abft.checksum_weights(rows, seed=rows)
+        abft.check_checksum(host, w, self.fft_len, site="stream.realize",
+                            index=group[0].index,
+                            blocks=[d.index for d in group])
+
+    def verify_member(self, host, row0: int, d: Decoded) -> None:
+        if self.verify == "off" or d.energy is None:
+            return
+        yr, yi = host
+        e_out = abft.energy(yr[row0:row0 + d.rows], yi[row0:row0 + d.rows])
+        abft.check_parseval(d.energy, e_out, self.fft_len,
+                            site="stream.realize", index=d.index)
 
     def encode(self, host, row0: int, d: Decoded) -> bytes:
         yr, yi = host
@@ -387,6 +444,34 @@ class StreamExecutor:
             except BaseException as e:
                 self._put_decoded(("err", index, is_spec, e))
 
+    def _corrupt_host(self, host, group: list[tuple[Decoded, bool]]):
+        """Post-realize corruption checkpoint (``kind="corrupt"`` rules at
+        stream.realize): silently perturb a scheduled member's rows of the
+        realized host arrays. Runs AFTER the CRC-verified read and the
+        device sync — only the verify hooks below can catch it."""
+        host = list(host) if isinstance(host, (tuple, list)) else [host]
+        row0 = 0
+        for d, _ in group:
+            scale = self._injector.corrupt_scale("stream.realize", d.index)
+            if scale is not None:
+                for k in range(len(host)):
+                    a = host[k]
+                    if isinstance(a, (bytes, bytearray)):
+                        if len(a) % 4 or not a:
+                            continue  # opaque map output; nothing to flip
+                        arr = np.frombuffer(a, dtype=np.float32).copy()
+                        perturb_array(arr, scale,
+                                      corrupt_salt("stream.realize",
+                                                   d.index, k))
+                        host[k] = arr.tobytes()
+                        continue
+                    if not a.flags.writeable:  # realized outputs often are
+                        a = host[k] = np.array(a, copy=True)
+                    perturb_array(a[row0:row0 + d.rows], scale,
+                                  corrupt_salt("stream.realize", d.index, k))
+            row0 += d.rows
+        return host[0] if len(host) == 1 else tuple(host)
+
     def _writeback(self, handle, group: list[tuple[Decoded, bool]]) -> None:
         try:
             t0 = time.monotonic()
@@ -402,6 +487,10 @@ class StreamExecutor:
             if self._injector is not None:
                 self._injector.fire_group(
                     "stream.realize", [d.index for d, _ in group])
+                host = self._corrupt_host(host, group)
+            # group invariant (abft checksum row): a failure here cannot
+            # name the culprit, so the whole group quarantines and retries
+            self.transform.verify_group(host, [d for d, _ in group])
         except BaseException as e:
             for d, is_spec in group:
                 self._events.put(("err", d.index, is_spec, e))
@@ -412,6 +501,9 @@ class StreamExecutor:
             try:
                 t0 = time.monotonic()
                 maybe_fire(self._injector, "stream.writeback", d.index)
+                # per-member invariant (Parseval): quarantines just this
+                # block back into the retry path — recompute-on-detect
+                self.transform.verify_member(host, row0, d)
                 out = self.transform.encode(host, row0, d)
                 self.store.write_output_block(self.out_dir, d.index, out)
                 self._add_stage("write", time.monotonic() - t0)

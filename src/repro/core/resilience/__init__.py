@@ -23,6 +23,13 @@ one subsystem that can be *proven* under systematic failure
                   re-plans distributed -> segmented/local instead of dying.
   * `events`    — the in-process event log (downgrades, device loss,
                   repairs) that tests and the chaos gate assert on.
+  * `verify`    — ABFT invariants (Parseval energy, linearity checksum
+                  row) with derived per-precision tolerances; a failed
+                  check raises `SilentCorruption` (retryable) and the
+                  quarantined unit recomputes through the ONE RetryPolicy.
+                  Paired with the silent ``kind="corrupt"`` fault rules
+                  in `faults` (post-CRC perturbation the byte-integrity
+                  layers provably cannot see).
 
 Exercised end to end by `benchmarks/bench_chaos.py` (BENCH_chaos.json,
 gated in test.sh/CI) and `tests/test_chaos.py` (`pytest -m chaos`).
@@ -31,23 +38,33 @@ gated in test.sh/CI) and `tests/test_chaos.py` (`pytest -m chaos`).
 from repro.core.resilience.events import clear_events, events, record_event
 from repro.core.resilience.events import set_capacity as set_event_capacity
 from repro.core.resilience.events import stats as event_stats
-from repro.core.resilience.faults import (SITES, FaultInjector, FaultPlan,
-                                          FaultRule, InjectedFault,
-                                          maybe_fire)
+from repro.core.resilience.faults import (KINDS, SITES, FaultInjector,
+                                          FaultPlan, FaultRule,
+                                          InjectedFault, maybe_corrupt,
+                                          maybe_fire, perturb_array)
 from repro.core.resilience.retry import RetryPolicy, RetryState
+from repro.core.resilience.verify import (VERIFY_MODES, SilentCorruption,
+                                          check_checksum, check_parseval)
 
 __all__ = [
+    "KINDS",
     "SITES",
+    "VERIFY_MODES",
     "FaultInjector",
     "FaultPlan",
     "FaultRule",
     "InjectedFault",
     "RetryPolicy",
     "RetryState",
+    "SilentCorruption",
+    "check_checksum",
+    "check_parseval",
     "clear_events",
     "event_stats",
     "events",
+    "maybe_corrupt",
     "maybe_fire",
+    "perturb_array",
     "record_event",
     "set_event_capacity",
 ]

@@ -288,6 +288,31 @@ class ExecutablePlan:
         local MXU compute (the predicted overlap win's numerator)."""
         return self.collective_bytes - self.exposed_collective_bytes
 
+    @property
+    def verify_flops(self) -> float:
+        """Flops the spec's ABFT mode adds (O(rows*n) invariant checks;
+        zero for verify="off"). Kept separate from `flops` — that is the
+        transform's algorithmic count, which verification never changes."""
+        from repro.core.resilience.verify import verify_flops
+        s = self.spec
+        return float(verify_flops(s.verify, s.n, max(s.rows, 1)))
+
+    @property
+    def verify_hbm_bytes(self) -> int:
+        """Extra host/HBM traffic of the spec's ABFT mode (re-reads of the
+        input/output planes for the energy and checksum reductions)."""
+        from repro.core.resilience.verify import verify_hbm_bytes
+        s = self.spec
+        return verify_hbm_bytes(s.verify, s.n, max(s.rows, 1))
+
+    @property
+    def verify_overhead(self) -> float:
+        """Analytic verification overhead: verify_flops / flops (0.0 when
+        either side is zero) — the cost-model number the bench_verify gate
+        reports alongside the measured wall-clock ratio."""
+        f = self.flops
+        return self.verify_flops / f if f else 0.0
+
     # ------------------------------------------------------------------
     # executables
 
@@ -567,6 +592,7 @@ def plan(kind: str = "c2c", *, n: int | None = None, shape=None,
          axes=None, natural_order: bool = True,
          fuse_twiddle: bool = False, overlap="auto",
          r2c_axis: int = -1, fallback: str = "error",
+         verify: str = "off",
          store=None, work_dir=None, budget_bytes: int | None = None,
          job_config=None):
     """Resolve a transform spec and return the cached `ExecutablePlan`.
@@ -613,6 +639,12 @@ def plan(kind: str = "c2c", *, n: int | None = None, shape=None,
         sub-mesh, then mesh-free/local. Every downgrade drops the stale
         mesh's cached plans (`invalidate_mesh`) and records a
         "plan_downgrade" resilience event (DESIGN.md §10).
+      verify: ABFT mode for consumers that run the plan's invariant
+        checks (DESIGN.md §13): "off" (default), "parseval" (per-member
+        energy invariant), or "abft" (linearity checksum row per batch).
+        Resolved pre-cache-key, so verified and unverified plans are
+        distinct cache entries; `verify_flops`/`verify_hbm_bytes`/
+        `verify_overhead` report the mode's analytic cost.
 
     Same resolved spec (and mesh) -> the SAME plan object, with its jit'd
     executables and twiddle tables already built.
@@ -658,7 +690,7 @@ def plan(kind: str = "c2c", *, n: int | None = None, shape=None,
                 "and budget_bytes= (the host working-set cap)")
         from repro.core.fft.outofcore import plan_out_of_core
         return plan_out_of_core(int(n), store, work_dir, int(budget_bytes),
-                                impl=impl, config=job_config)
+                                impl=impl, config=job_config, verify=verify)
     if store is not None or work_dir is not None or budget_bytes is not None:
         raise ValueError(
             "store=/work_dir=/budget_bytes= apply only to "
@@ -697,7 +729,8 @@ def plan(kind: str = "c2c", *, n: int | None = None, shape=None,
                          batch_tile=batch_tile, axes=None,
                          natural_order=natural_order,
                          fuse_twiddle=fuse_twiddle, overlap=overlap,
-                         r2c_axis=r2c_axis, fallback="error")
+                         r2c_axis=r2c_axis, fallback="error",
+                         verify=verify)
             except (ValueError, NotImplementedError):
                 continue
             record_event(
@@ -744,7 +777,8 @@ def plan(kind: str = "c2c", *, n: int | None = None, shape=None,
             placement=placement, layout=layout, impl=impl,
             precision=precision, interpret=interpret, batch_tile=batch_tile,
             num_devices=num_devices, axes=axes, natural_order=natural_order,
-            fuse_twiddle=fuse_twiddle, overlap=overlap, r2c_axis=r2c_axis)
+            fuse_twiddle=fuse_twiddle, overlap=overlap, r2c_axis=r2c_axis,
+            verify=verify)
     except ValueError:
         # mesh-bound strategy unsatisfiable (e.g. too few devices for the
         # split): degrade walks the same chain instead of raising. A

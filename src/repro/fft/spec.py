@@ -70,6 +70,9 @@ class FftSpec:
     fuse_twiddle: bool            # 1-D distributed only: twiddle in leaf
     overlap: object = "off"       # distributed only: "off" | int chunks
     #                               ("auto" is resolved here, pre-cache-key)
+    verify: str = "off"           # ABFT mode: "off"|"parseval"|"abft"
+    #                               (pre-cache-key: verified and unverified
+    #                               plans are distinct cache entries)
 
     @property
     def rows(self) -> int:
@@ -216,10 +219,14 @@ def resolve(kind: str, n=None, batch_shape=(), placement: str = "auto",
             batch_tile: int | None = None, num_devices: int | None = None,
             axes=None, natural_order: bool = True,
             fuse_twiddle: bool = False, overlap="auto", shape=None,
-            r2c_axis: int = -1) -> FftSpec:
+            r2c_axis: int = -1, verify: str = "off") -> FftSpec:
     """Validate + normalize everything into a frozen FftSpec."""
+    from repro.core.resilience.verify import VERIFY_MODES
     if kind not in KINDS:
         raise ValueError(f"unknown kind {kind!r}; expected one of {KINDS}")
+    if verify not in VERIFY_MODES:
+        raise ValueError(
+            f"unknown verify mode {verify!r}; expected one of {VERIFY_MODES}")
     if placement not in PLACEMENTS:
         raise ValueError(
             f"unknown placement {placement!r}; expected one of {PLACEMENTS}")
@@ -336,7 +343,7 @@ def resolve(kind: str, n=None, batch_shape=(), placement: str = "auto",
                    axes=tuple(axes) if axes is not None else None,
                    natural_order=bool(natural_order),
                    fuse_twiddle=bool(fuse_twiddle),
-                   overlap=overlap)
+                   overlap=overlap, verify=verify)
     # normalize placement-irrelevant knobs so equivalent specs cache-hit
     # (the pencil engine has no outer twiddle and is always natural-order)
     if placement != "distributed" or len(shape) > 1:

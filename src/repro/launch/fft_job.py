@@ -62,7 +62,7 @@ class _TimedStore:
         self._add("write", t0)
 
 
-def serial_map_fn(fft_len: int, impl: str, add):
+def serial_map_fn(fft_len: int, impl: str, add, verify: str = "off"):
     """The synchronous per-block map task, with per-stage clocks.
 
     Stage names match the stream executor's so the two paths are
@@ -79,7 +79,8 @@ def serial_map_fn(fft_len: int, impl: str, add):
         # every same-shaped block hits the process-level plan cache: the
         # jit'd callable is built once, the cufftPlanMany amortization
         p = fft_api.plan(kind="c2c", n=fft_len,
-                         batch_shape=re.shape[:-1], impl=impl)
+                         batch_shape=re.shape[:-1], impl=impl,
+                         verify=verify)
         yr, yi = p.execute(re, im)
         yr.block_until_ready()  # the serial path's per-block sync
         t = add("compute", t)
@@ -92,12 +93,29 @@ def serial_map_fn(fft_len: int, impl: str, add):
     return map_fn
 
 
+def parseval_verify_fn(fft_len: int):
+    """Serial-mode ABFT hook (`JobConfig.verify_fn`): block-aggregate
+    Parseval over the map output — every segment is length fft_len, so
+    the whole block must carry fft_len x its input energy."""
+    from repro.core.resilience import verify as abft
+
+    def verify_fn(data: bytes, out: bytes, index: int) -> None:
+        re, im = segments_of_block(data, fft_len)
+        yr, yi = segments_of_block(out, fft_len)
+        abft.check_parseval(abft.energy(re, im), abft.energy(yr, yi),
+                            fft_len, "f32", site="maponly.attempt",
+                            index=index)
+
+    return verify_fn
+
+
 def run_job(store: BlockStore, out_dir, *, fft_len: int, impl: str,
-            cfg: JobConfig, pipelined: bool):
+            cfg: JobConfig, pipelined: bool, verify: str = "off"):
     """Run the FFT job serial or pipelined; returns (job, stats, stage_s)."""
     if pipelined:
         job = MapOnlyJob(store, out_dir, config=cfg, pipelined=True,
-                         transform=SegmentFFTTransform(fft_len, impl=impl))
+                         transform=SegmentFFTTransform(fft_len, impl=impl,
+                                                       verify=verify))
         stats = job.run()
         return job, stats, dict(stats.stage_s)
     stage_s = {k: 0.0 for k in ("read", "h2d", "compute", "d2h", "write")}
@@ -109,8 +127,11 @@ def run_job(store: BlockStore, out_dir, *, fft_len: int, impl: str,
             stage_s[stage] += now - t0
         return now
 
+    if verify != "off":
+        from dataclasses import replace as _replace
+        cfg = _replace(cfg, verify_fn=parseval_verify_fn(fft_len))
     job = MapOnlyJob(_TimedStore(store, add), out_dir,
-                     serial_map_fn(fft_len, impl, add), config=cfg)
+                     serial_map_fn(fft_len, impl, add, verify), config=cfg)
     stats = job.run()
     return job, stats, stage_s
 
@@ -152,15 +173,21 @@ def run_out_of_core(args) -> dict:
 
     plan = fft_api.plan(kind="c2c", n=n, placement="out_of_core",
                         store=store, work_dir=work / "ooc", impl=args.impl,
-                        budget_bytes=budget, job_config=cfg)
+                        budget_bytes=budget, job_config=cfg,
+                        verify=args.verify)
     t0 = time.monotonic()
     stats = plan.execute()
     t_job = time.monotonic() - t0
     t0 = time.monotonic()
     nbytes = plan.merge(work / "merged.bin")
     t_merge = time.monotonic() - t0
+    from repro.core.resilience import events
     return {
         "mode": "out_of_core",
+        "verify": args.verify,
+        "corruption_detected": len(events("verify_failed")),
+        "corruption_recomputed": (stats.pass1.retries + stats.pass2.retries
+                                  if stats.pass1 and stats.pass2 else 0),
         "factors": factors.as_dict(),
         "block_bytes": block_bytes,
         "budget_bytes": budget,
@@ -205,8 +232,16 @@ def main(argv=None):
                     help="deterministic fault schedule to replay "
                          "(core/resilience/faults.py FaultPlan.parse spec: "
                          "'seed=N,rate=R,sites=a+b', inline JSON, or "
-                         "@file.json) — the report then carries retry, "
+                         "@file.json; add kind=corrupt for silent "
+                         "bit-rot) — the report then carries retry, "
                          "repair, and injector stats")
+    ap.add_argument("--verify", default="off",
+                    choices=["off", "parseval", "abft"],
+                    help="ABFT invariant verification (DESIGN.md §13): "
+                         "parseval checks output energy per unit, abft "
+                         "adds a linearity checksum row per batch; "
+                         "detections quarantine-and-recompute through "
+                         "the retry path and are counted in the report")
     ap.add_argument("--out-of-core", action="store_true",
                     help="run one 2^log2-n-point c2c whose operand lives "
                          "in the BlockStore, streamed under --budget-mb "
@@ -250,7 +285,8 @@ def main(argv=None):
     t0 = time.monotonic()
     job, stats, stage_s = run_job(store, work / "out", fft_len=args.fft_len,
                                   impl=args.impl, cfg=cfg,
-                                  pipelined=args.pipelined)
+                                  pipelined=args.pipelined,
+                                  verify=args.verify)
     t_job = time.monotonic() - t0
     t0 = time.monotonic()
     nbytes = job.merge(work / "merged.bin")
@@ -274,8 +310,12 @@ def main(argv=None):
                                efficiency=1.0)
     model = ClusterModel(unit_time_s=unit)
     stage_total = sum(stage_s.values())
+    from repro.core.resilience import events
     print(json.dumps({
         "mode": "pipelined" if args.pipelined else "serial",
+        "verify": args.verify,
+        "corruption_detected": len(events("verify_failed")),
+        "corruption_recomputed": stats.retries,
         "size_mb": args.size_mb,
         "blocks": len(store.blocks),
         "copy_in_s": round(t_put, 3),

@@ -62,6 +62,14 @@ def main(argv=None):
                     help="admitted-incomplete cap per spec key")
     ap.add_argument("--shed-policy", default="oldest_deadline",
                     choices=list(SHED_POLICIES))
+    ap.add_argument("--verify", default="off",
+                    choices=["off", "parseval", "abft"],
+                    help="ABFT silent-corruption defense (DESIGN.md §13): "
+                         "parseval checks each result's energy, abft adds "
+                         "a checksum row per launch; detections quarantine "
+                         "and recompute through the retry path "
+                         "(corruption_detected / corruption_recomputed in "
+                         "the service stats)")
     ap.add_argument("--seed", type=int, default=0,
                     help="workload seed (request mix + operand content)")
     args = ap.parse_args(argv)
@@ -84,7 +92,7 @@ def main(argv=None):
         default_deadline_s=(args.deadline_ms / 1e3
                             if args.deadline_ms else None),
         retry=RetryPolicy(max_attempts=args.max_attempts),
-        injector=injector)
+        injector=injector, verify=args.verify)
 
     t0 = time.monotonic()
     records = loadgen.drive(service, num_requests=num_requests,
@@ -105,6 +113,8 @@ def main(argv=None):
         else None,
         "outcomes": dict(sorted(buckets.items())),
         "drained_idle": service.idle(),
+        "verify": args.verify,
+        "verify_failed_events": len(events("verify_failed")),
         "service": stats,
         "degrade_events": events("service_degrade"),
         "event_log": event_stats(),

@@ -68,8 +68,10 @@ from dataclasses import dataclass, field, replace
 
 import numpy as np
 
+from repro.core.resilience import verify as abft
 from repro.core.resilience.events import record_event
-from repro.core.resilience.faults import maybe_fire
+from repro.core.resilience.faults import (corrupt_salt, maybe_fire,
+                                          perturb_array)
 from repro.core.resilience.retry import RetryPolicy
 from repro.fft import spec as spec_mod
 
@@ -188,6 +190,8 @@ class FftTicket:
         #: affect a row's result, but the launch size does.
         self.batch_rows: int | None = None
         self._occupies = False   # holds an admission slot until resolved
+        self._energy: float | None = None  # input energy (verify modes)
+        self._corrupt_hit = False          # quarantined at least once
         self.timings: dict = {}   # queue_s / batch_s / execute_s / total_s
         self._event = threading.Event()
         # internal routing state (service-owned, not part of the API)
@@ -233,6 +237,8 @@ class ServiceStats:
     max_queued: int = 0
     degrade_events: int = 0
     crash_recoveries: int = 0
+    corruption_detected: int = 0    # verify checks that tripped
+    corruption_recomputed: int = 0  # quarantined requests later completed
 
     def __post_init__(self):
         self._lock = threading.Lock()
@@ -308,6 +314,11 @@ class _Group:
 
     key: object
     tickets: list
+    # ABFT state for verify="abft" launches: the checksum row appended at
+    # gather is `verify_weights @ rows[:verify_rows]`; writeback replays
+    # the combination on the realized output
+    verify_weights: object = None
+    verify_rows: int = 0
 
 
 class FftService:
@@ -341,6 +352,18 @@ class FftService:
       degrade: pass fallback="degrade" to every plan call (re-plans on
         mesh loss instead of raising); injector: `FaultInjector` wired to
         the serve.* sites.
+      verify: "off" | "parseval" | "abft" — ABFT silent-corruption
+        defense (DESIGN.md §13). "parseval" checks every request's
+        output energy against its input energy recorded at admission
+        (per-request quarantine); "abft" instead appends one linearity
+        checksum row to every
+        launch (riding the full-plan padding trick, so a spec key still
+        touches at most two plan-cache entries). A failed check raises
+        `SilentCorruption`, quarantines the unit (the single request for
+        an energy miss, the whole batch for a checksum miss — linearity
+        cannot name the culprit row) and recomputes it through the ONE
+        retry path; `corruption_detected` / `corruption_recomputed`
+        count the round trips.
     """
 
     def __init__(self, *, impl: str = "matfft", interpret=None,
@@ -356,7 +379,7 @@ class FftService:
                  shed_fraction: float = 0.25,
                  retry: RetryPolicy | None = None, degrade: bool = True,
                  injector=None, poll_interval_s: float = 0.001,
-                 start: bool = True):
+                 verify: str = "off", start: bool = True):
         if queue_depth < 1:
             raise ValueError(f"queue_depth must be >= 1, got {queue_depth}")
         if coalesce < 1:
@@ -385,6 +408,7 @@ class FftService:
         self.degrade = degrade
         self.injector = injector
         self.poll_interval_s = poll_interval_s
+        self.verify = abft.check_mode(verify)
         self.stats = ServiceStats()
         self._clock = self.policy.clock
 
@@ -488,6 +512,13 @@ class FftService:
         ticket = FftTicket(seq, kind, shape_t, rows, dl)
         ticket._operands = ops
         ticket._squeeze = squeeze
+        if self.verify == "parseval":
+            # the Parseval baseline: input energy measured at the trust
+            # boundary, before the request ever touches service state.
+            # abft mode skips this — the checksum row is the (stronger)
+            # invariant and the per-request energy passes were the
+            # dominant verification cost.
+            ticket._energy = abft.energy(*ops)
         ticket._t_submit = now
         ticket._deadline_at = None if dl is None else now + dl
         # spec-key resolution validates the transform up front (pow2 axes,
@@ -600,7 +631,8 @@ class FftService:
         resolved = spec_mod.resolve(
             kind=kind, shape=shape, batch_shape=(rows,),
             placement=self.placement, layout=self.layout, impl=self.impl,
-            interpret=self.interpret, num_devices=num_devices)
+            interpret=self.interpret, num_devices=num_devices,
+            verify=self.verify)
         return replace(resolved, batch_shape=(rows,), placement="auto")
 
     # --------------------------------------------------------------- batcher
@@ -611,7 +643,8 @@ class FftService:
             kind=key.kind, shape=key.shape, batch_shape=(total_rows,),
             impl=self.impl, interpret=self.interpret, layout=self.layout,
             mesh=self.mesh, placement=self.placement,
-            fallback="degrade" if self.degrade else "error")
+            fallback="degrade" if self.degrade else "error",
+            verify=self.verify)
 
     def _batch_loop(self) -> None:
         while True:
@@ -794,26 +827,39 @@ class FftService:
         key = group.key
         rows = group.tickets[0].rows
         n_ops = len(group.tickets[0]._operands)
-        if len(group.tickets) == 1:
+        extra = 1 if self.verify == "abft" else 0
+        if len(group.tickets) == 1 and not extra:
             total = rows
             ops = group.tickets[0]._operands
         else:
-            total = self.coalesce * rows
+            total = rows if len(group.tickets) == 1 \
+                else self.coalesce * rows
             ops = []
             for i in range(n_ops):
-                buf = np.zeros((total, *key.shape), np.float32)
+                buf = np.zeros((total + extra, *key.shape), np.float32)
                 r0 = 0
                 for t in group.tickets:
                     buf[r0:r0 + rows] = t._operands[i]
                     r0 += rows
                 ops.append(buf)
+            if extra:
+                # one linearity checksum row rides the batch: its
+                # transform must equal the same weighted combination of
+                # the rows' transforms (weights recomputable at
+                # writeback from `total` alone — no state to thread)
+                w = abft.checksum_weights(total, seed=total)
+                for buf in ops:
+                    buf[total] = (w @ buf[:total].reshape(
+                        total, -1)).reshape(key.shape)
+                group.verify_weights = w
+                group.verify_rows = total
         pad_rows = total - rows * len(group.tickets)
-        plan = self._plan(key, total)
+        plan = self._plan(key, total + extra)
         t0 = self._clock()
         out = plan.execute_async(*ops)
         for t in group.tickets:
             t._t_launch = t0
-            t.batch_rows = total
+            t.batch_rows = total + extra
         return out, pad_rows
 
     def _writeback(self, group: _Group, handle) -> None:
@@ -826,6 +872,49 @@ class FftService:
             with self._outstanding_lock:
                 self._outstanding -= 1
 
+    def _corrupt_host(self, host, group: _Group):
+        """Seeded silent-corruption checkpoint: perturb a hit ticket's
+        realized rows AFTER every integrity/fault hook has run — only the
+        ABFT invariants stand between this and the client."""
+        if self.injector is None:
+            return host
+        rows = group.tickets[0].rows
+        out = list(host)
+        r0 = 0
+        for t in group.tickets:
+            scale = self.injector.corrupt_scale("serve.execute", t.seq)
+            if scale is not None:
+                for k, a in enumerate(out):
+                    if not a.flags.writeable:
+                        a = out[k] = np.array(a, copy=True)
+                    perturb_array(a[r0:r0 + rows], scale,
+                                  corrupt_salt("serve.execute", t.seq, k))
+            r0 += rows
+        return tuple(out)
+
+    def _verify_group(self, host, group: _Group) -> None:
+        """The batch-level linearity check; a miss quarantines the WHOLE
+        group (the checksum residual cannot name the culprit row)."""
+        if group.verify_weights is None:
+            return
+        abft.check_checksum(
+            host, group.verify_weights, int(math.prod(group.key.shape)),
+            "f32", site="serve.execute", index=group.tickets[0].seq,
+            seqs=[t.seq for t in group.tickets])
+
+    def _verify_member(self, t: FftTicket, value) -> None:
+        """Per-request Parseval: output energy vs the energy recorded at
+        admission; a miss quarantines just this request."""
+        if t._energy is None:
+            return
+        n = int(math.prod(t.shape))
+        if t.kind == "r2c":
+            e_out = abft.energy_onesided(value[0], value[1], n)
+        else:
+            e_out = abft.energy(*value)
+        abft.check_parseval(t._energy, e_out, n, "f32",
+                            site="serve.execute", index=t.seq)
+
     def _writeback_inner(self, group: _Group, handle) -> None:
         try:
             try:
@@ -835,6 +924,8 @@ class FftService:
             if self.injector is not None:
                 self.injector.fire_group(
                     "serve.execute", [t.seq for t in group.tickets])
+            host = self._corrupt_host(host, group)
+            self._verify_group(host, group)
         except BaseException as e:
             self._fail_group(group, e, stage="execute")
             return
@@ -845,6 +936,11 @@ class FftService:
             value = tuple(a[r0] if t._squeeze else a[r0:r0 + rows]
                           for a in host)
             r0 += rows
+            try:
+                self._verify_member(t, value)
+            except abft.SilentCorruption as e:
+                self._fail_group(_Group(group.key, [t]), e, stage="execute")
+                continue
             t.timings = {
                 "queue_s": t._t_formed - t._t_submit,
                 "batch_s": t._t_launch - t._t_formed,
@@ -872,6 +968,10 @@ class FftService:
         """
         retry: list[FftTicket] = []
         now = self._clock()
+        if isinstance(err, abft.SilentCorruption):
+            self.stats.bump("corruption_detected")
+            for t in group.tickets:
+                t._corrupt_hit = True
         for t in group.tickets:
             elapsed = now - t._t_submit
             late = t._deadline_at is not None and now >= t._deadline_at
@@ -908,6 +1008,8 @@ class FftService:
                     self._spec_inflight.pop(t._key, None)
         if error is None:
             self.stats.bump("completed")
+            if t._corrupt_hit:
+                self.stats.bump("corruption_recomputed")
         elif isinstance(error, RequestFailed):
             self.stats.bump("failed")
         t._event.set()

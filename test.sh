@@ -72,6 +72,17 @@ if [[ $# -eq 0 && -z "${REPRO_SKIP_SERVE_BENCH:-}" ]]; then
   python benchmarks/bench_serve.py --quick
 fi
 
+# verify gate: seeded corrupt storms (silent post-CRC value corruption)
+# across the stream, out-of-core, and serve paths must be detected by
+# the ABFT invariants, recover bitwise through the retry path, trip zero
+# false positives on clean runs, and cost < 10% wall overhead on the
+# throttled disk model; the same storms with verify off must end
+# silently wrong with zero retries (BENCH_verify.json; exits nonzero on
+# regression). The marked verify tests also run in the sweep below.
+if [[ $# -eq 0 && -z "${REPRO_SKIP_VERIFY_BENCH:-}" ]]; then
+  python benchmarks/bench_verify.py --quick
+fi
+
 # --durations: the bench-gated suite keeps growing; keep the slowest
 # tests visible in CI logs so the ~45 min job budget (ci.yml
 # timeout-minutes) is spent knowingly, not discovered on timeout.

@@ -82,6 +82,11 @@ def pytest_configure(config):
         "markers",
         "serve: FFT-as-a-service front-end tests (admission control, "
         "dynamic batching, deadlines; the load gate is bench_serve.py)")
+    config.addinivalue_line(
+        "markers",
+        "verify: ABFT silent-corruption defense tests (invariant checks, "
+        "corrupt fault rules, quarantine-and-recompute; the storm gate "
+        "is bench_verify.py)")
 
 
 @pytest.fixture
