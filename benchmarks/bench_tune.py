@@ -1,0 +1,229 @@
+"""Measuring autotuner + 3-D pencil acceptance gate (BENCH_tune.json).
+
+Three claims, each on a deterministic substrate (PR-3 precedent: CI has
+no real interconnect or spindle, so the gates run on the seeded models
+and the raw container walls are recorded un-gated):
+
+  * **Tuned <= default** — `tune()` with the deterministic two-resource
+    event-sim measurer (ICI link + MXU, the bench_distributed constants)
+    must pick knobs whose modeled wall is <= the analytic default's wall
+    for the distributed pencil, and `tune_out_of_core()` on the
+    ThrottledStore disk model (250 MB/s spindle + per-job overhead) must
+    pick a panel_scale no slower than the default factorization. Both
+    are structural — the default is always candidate 0 of the sweep —
+    so a regression here means the sweep lost the default or the ranking
+    broke.
+  * **Wisdom round-trip** — a SECOND process re-planning the same spec
+    against the shared wisdom file must report `wisdom_hit` with ZERO
+    measurements and the IDENTICAL winning knobs: plan selection is a
+    pure lookup, FFTW-wisdom style.
+  * **3-D pencil** — the (4, 2)-mesh pencil volume must be bitwise-equal
+    to the LOCAL fftn oracle under BOTH exchange engines, run exactly
+    ``ndim-1 == 2`` exchange legs, and its per-leg collective-byte
+    accounting must sum to the totals the cost model gates on.
+"""
+
+from __future__ import annotations
+
+import os
+
+_flags = os.environ.get("XLA_FLAGS", "")
+if "xla_force_host_platform_device_count" not in _flags:
+    os.environ["XLA_FLAGS"] = (
+        _flags + " --xla_force_host_platform_device_count=8").strip()
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import json  # noqa: E402
+import subprocess  # noqa: E402
+import sys  # noqa: E402
+import tempfile  # noqa: E402
+from pathlib import Path  # noqa: E402
+
+import numpy as np  # noqa: E402
+import jax  # noqa: E402
+
+import repro.fft as fft_api  # noqa: E402
+from repro import compat  # noqa: E402
+from repro.fft import tuner  # noqa: E402
+
+OUT_PATH = Path(__file__).resolve().parent.parent / "BENCH_tune.json"
+
+SHAPE3 = (16, 32, 64)   # 3-D pencil volume for the bitwise gate
+SHAPE2 = (64, 256)      # distributed 2-D spec the tuner sweeps
+BT = 2                  # matched kernel tile (bitwise vs local)
+
+ICI_BPS = 50e9          # bench_distributed's event-sim constants
+MACS_PS = 2e13
+RING_LAT_S = 1e-6
+A2A_LAT_S = 1e-6
+DISK_BPS = 250e6        # core.pipeline.testing.DISK_MB_S
+
+
+def event_sim_measurer(plan, cfg):
+    """Deterministic two-resource schedule wall for a distributed plan:
+    leaf GEMM time + the exchange bytes the pipeline cannot hide + a
+    launch-latency charge per collective round (chunked engines pay
+    D-1 ppermute rounds per chunk per leg; monolithic pays one
+    all_to_all per leg)."""
+    comp = plan.gemm_macs / MACS_PS
+    exposed = plan.exposed_collective_bytes / ICI_BPS
+    legs = getattr(plan.dist, "n_exchanges", 1) if plan.dist else 0
+    ov = plan.spec.overlap
+    if ov == "off" or not legs:
+        lat = legs * A2A_LAT_S
+    else:
+        ring = max(getattr(plan.dist, "grid", (plan.dist.d,)))
+        lat = legs * int(ov) * (ring - 1) * RING_LAT_S
+    extra = 0.0
+    if plan.spec.layout == "copy":
+        extra = plan.hbm_bytes / (8 * MACS_PS)  # materialized transposes
+    return comp + exposed + lat + extra
+
+
+_CHILD = r"""
+import json, os, sys
+import repro.fft as fft_api
+from repro.fft import tuner
+
+wp, payload = sys.argv[1], json.loads(sys.argv[2])
+cfg = tuner.TuneConfig(measurer="analytic")
+p = fft_api.plan(kind="c2c", shape=tuple(payload["shape"]),
+                 batch_shape=tuple(payload["batch_shape"]),
+                 tune=True, wisdom_path=wp, tune_config=cfg)
+stats = tuner.tune_stats()
+print(json.dumps({
+    "measurements": stats["measurements"],
+    "wisdom_hits": stats["wisdom_hits"],
+    "knobs": {"layout": p.spec.layout, "overlap": p.spec.overlap,
+              "batch_tile": p.spec.batch_tile},
+    "cache_wisdom_hits": fft_api.cache_info()["wisdom_hits"],
+}))
+"""
+
+
+def run(quick: bool = False):
+    d = jax.device_count()
+    fft_api.clear_plan_cache()
+    tuner.reset_tune_stats()
+    tmp = Path(tempfile.mkdtemp(prefix="repro_tune_bench_"))
+    wp = str(tmp / "wisdom.json")
+
+    # ---- gate (a): tuned <= default on the event-sim model -----------
+    mesh = compat.make_mesh((d,), ("data",))
+    cfg = tuner.TuneConfig(measurer=event_sim_measurer)
+    knobs, rep = tuner.tune(
+        kind="c2c", shape=(16 * d, 256), mesh=mesh, axes=("data",),
+        num_devices=d, placement="distributed",
+        wisdom_path=str(tmp / "dist.json"), config=cfg)
+    default_wall = rep.candidates[0]["measured_s"]
+    tuned_wall = min(c["measured_s"] for c in rep.candidates)
+    tuned_le_default = tuned_wall <= default_wall
+
+    scale, orep = tuner.tune_out_of_core(
+        1 << 24, 1 << 22, wisdom_path=str(tmp / "dist.json"))
+    ooc_default = next(c["measured_s"] for c in orep.candidates
+                       if c["knobs"]["panel_scale"] == 1)
+    ooc_tuned = min(c["measured_s"] for c in orep.candidates)
+    ooc_le_default = ooc_tuned <= ooc_default
+
+    # ---- gate (b): wisdom round-trip across processes ----------------
+    payload = json.dumps({"shape": SHAPE2, "batch_shape": [8]})
+    env = dict(os.environ, PYTHONPATH=os.environ.get("PYTHONPATH", "src"))
+    outs = []
+    for _ in range(2):
+        proc = subprocess.run(
+            [sys.executable, "-c", _CHILD, wp, payload],
+            capture_output=True, text=True, env=env, check=True)
+        outs.append(json.loads(proc.stdout.strip().splitlines()[-1]))
+    first, second = outs
+    round_trip = (first["measurements"] > 0
+                  and second["measurements"] == 0
+                  and second["wisdom_hits"] == 1
+                  and second["cache_wisdom_hits"] == 1
+                  and second["knobs"] == first["knobs"])
+
+    # ---- gate (c): 3-D pencil bitwise vs local fftn ------------------
+    mesh3 = compat.make_mesh((4, d // 4), ("data", "model")) \
+        if d >= 8 else None
+    pencil_checks = {}
+    if mesh3 is not None:
+        rng = np.random.default_rng(0)
+        xr, xi = (rng.standard_normal(SHAPE3).astype(np.float32)
+                  for _ in range(2))
+        local = fft_api.plan(kind="c2c", shape=SHAPE3, batch_tile=BT,
+                             placement="local")
+        want = [np.asarray(a) for a in local.execute(xr, xi)]
+        for overlap in ("off", 2):
+            p = fft_api.plan(kind="c2c", shape=SHAPE3, mesh=mesh3,
+                             placement="distributed", batch_tile=BT,
+                             overlap=overlap)
+            got = p.execute(xr, xi)
+            pencil_checks[f"bitwise_overlap_{overlap}"] = all(
+                np.asarray(g).tobytes() == w.tobytes()
+                for g, w in zip(got, want))
+        p3 = fft_api.plan(kind="c2c", shape=SHAPE3, mesh=mesh3,
+                          placement="distributed", overlap="off")
+        legs = p3.per_leg_collective_bytes
+        pencil_checks["n_exchanges_is_ndim_minus_1"] = (
+            p3.dist.n_exchanges == len(SHAPE3) - 1)
+        pencil_checks["per_leg_bytes_sum"] = (
+            len(legs) == p3.dist.n_exchanges
+            and sum(legs) == p3.collective_bytes)
+
+    checks = {
+        "tuned_le_default": tuned_le_default,
+        "ooc_tuned_le_default": ooc_le_default,
+        "wisdom_round_trip": round_trip,
+        **pencil_checks,
+    }
+    doc = {
+        "quick": quick,
+        "config": {"devices": d, "shape3": SHAPE3, "shape2": SHAPE2,
+                   "ici_bps": ICI_BPS, "macs_ps": MACS_PS,
+                   "disk_bps": DISK_BPS},
+        "tuned": {"knobs": knobs, "wall_s": tuned_wall,
+                  "default_wall_s": default_wall,
+                  "candidates": len(rep.candidates),
+                  "disagreement": rep.disagreement},
+        "ooc": {"panel_scale": scale, "wall_s": ooc_tuned,
+                "default_wall_s": ooc_default},
+        "wisdom": {"first": first, "second": second},
+        "tune_stats": tuner.tune_stats(),
+        "checks": checks,
+    }
+    OUT_PATH.write_text(json.dumps(doc, indent=1))
+
+    rows = [
+        {"name": "tune_dist_default", "us_per_call": default_wall * 1e6,
+         "derived": f"D={d} analytic-default knobs"},
+        {"name": "tune_dist_tuned", "us_per_call": tuned_wall * 1e6,
+         "derived": f"winner={knobs}"},
+        {"name": "tune_ooc", "us_per_call": ooc_tuned * 1e6,
+         "derived": f"panel_scale={scale} default={ooc_default * 1e6:.1f}us"},
+        {"name": "tune_wisdom", "us_per_call": 0.0,
+         "derived": (f"first_meas={first['measurements']} "
+                     f"second_meas={second['measurements']} "
+                     f"hit={second['wisdom_hits'] == 1}")},
+        {"name": "tune_checks", "us_per_call": 0.0,
+         "derived": " ".join(f"{k}={'PASS' if ok else 'FAIL'}"
+                             for k, ok in checks.items())},
+    ]
+    return rows
+
+
+def main(argv=None) -> int:
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args(argv)
+    for row in run(quick=args.quick):
+        print(f"{row['name']},{row['us_per_call']:.1f},\"{row['derived']}\"")
+    checks = json.loads(OUT_PATH.read_text())["checks"]
+    if not all(checks.values()):
+        print(f"FAIL: {checks}")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -95,6 +95,18 @@ class DistPlan:
         return 2 * 4 * self.n // self.d
 
     @property
+    def per_leg_bytes_per_device(self) -> tuple:
+        """Per-exchange-leg payload (uniform legs), tuner-facing — same
+        shape of accounting as PencilPlan.per_leg_bytes_per_device."""
+        return (self.bytes_per_exchange_per_device,) * self.n_exchanges
+
+    @property
+    def per_leg_exposed_bytes_per_device(self) -> tuple:
+        """Structurally exposed (fill/drain) payload per leg."""
+        return tuple(b // (self.chunks or 1)
+                     for b in self.per_leg_bytes_per_device)
+
+    @property
     def collective_bytes_per_device(self) -> int:
         """Planar f32 payload each device exchanges across the whole
         transform — n_exchanges legs, so transposed-out plans report one
@@ -127,20 +139,26 @@ def plan_distributed(n: int, num_devices: int, *, natural_order: bool = True,
 
 @dataclass(frozen=True)
 class PencilPlan:
-    """Cross-device plan for a 2-D pencil-decomposed transform.
+    """Cross-device plan for an N-D pencil-decomposed transform.
 
-    Input (n0, n1) rows shard contiguously over D devices; each device
-    FFTs its local rows (the contiguous axis), then ONE transpose exchange
-    re-pencils the data column-wise — (n0, n1/D) per device — and the
-    column FFT runs locally with a column-major store. The output is the
-    natural-order spectrum, column-sharded: one exchange leg total vs
-    three for the 1-D distributed four-step (arXiv:2202.12756's slab/
-    pencil structure on our existing exchange engines).
+    Input (n0, ..., n_{nd-1}) shards its leading nd-1 axes over a device
+    grid (2-D: the flattened mesh, grid=(D,); 3-D: one mesh axis per
+    sharded axis, grid=(d0, d1)); each device FFTs its local rows of the
+    contiguous last axis, then ``ndim-1`` re-pencil exchange legs each
+    re-shard one transformed axis and un-shard the next axis to transform
+    — (arXiv:2202.12756's slab/pencil structure on our existing exchange
+    engines). For 2-D that is the familiar ONE exchange vs three for the
+    1-D distributed four-step; 3-D volumes run two legs.
     """
 
-    shape: tuple      # (n0, n1) global image
-    d: int            # devices along the FFT axes
+    shape: tuple      # (n0, ..., n_{nd-1}) global volume
+    d: int            # total devices along the FFT axes
+    grid: tuple = None  # devices per exchange leg k (shards axis k)
     chunks: int | None = None  # ppermute pipeline slabs; None = all_to_all
+
+    def __post_init__(self):
+        if self.grid is None:  # legacy 2-D callers: one flattened ring
+            object.__setattr__(self, "grid", (self.d,))
 
     @property
     def n(self) -> int:
@@ -148,16 +166,29 @@ class PencilPlan:
 
     @property
     def n_exchanges(self) -> int:
-        return 1
+        return len(self.shape) - 1
 
     @property
     def bytes_per_exchange_per_device(self) -> int:
-        """Planar f32 payload each device moves in THE exchange."""
+        """Planar f32 payload each device moves in ONE exchange leg (every
+        leg re-pencils the full local volume, so legs are equal-sized)."""
         return 2 * 4 * self.n // self.d
+
+    @property
+    def per_leg_bytes_per_device(self) -> tuple:
+        """Per-exchange-leg payload, leg order = transform order (axis
+        nd-2 first, axis 0 last) — what the tuner ranks against."""
+        return (self.bytes_per_exchange_per_device,) * self.n_exchanges
 
     @property
     def collective_bytes_per_device(self) -> int:
         return self.n_exchanges * self.bytes_per_exchange_per_device
+
+    @property
+    def per_leg_exposed_bytes_per_device(self) -> tuple:
+        """Structurally exposed (fill/drain) payload per leg."""
+        return tuple(b // (self.chunks or 1)
+                     for b in self.per_leg_bytes_per_device)
 
     @property
     def exposed_collective_bytes_per_device(self) -> int:
@@ -165,16 +196,77 @@ class PencilPlan:
         return self.collective_bytes_per_device // (self.chunks or 1)
 
 
-def plan_pencil(shape, num_devices: int, *,
+def pencil_grid(shape, num_devices: int, axis_sizes=None) -> tuple:
+    """Device-grid factors for the pencil legs of an N-D ``shape``.
+
+    2-D pencils flatten every mesh axis into one exchange ring (grid=(D,),
+    the PR-5 layout). 3-D volumes shard BOTH leading axes, one mesh axis
+    each — the caller must supply the per-mesh-axis sizes (in spec.axes
+    order) so the grid matches the mesh's actual structure.
+    """
+    nd = len(shape)
+    if nd == 2:
+        return (int(num_devices),)
+    if axis_sizes is None:
+        raise ValueError(
+            f"{nd}-D pencil volumes shard the {nd - 1} leading axes over a "
+            f"device grid: plan with a mesh (its axes become the grid, "
+            f"e.g. a (4, 2) mesh for shape={shape})")
+    grid = tuple(int(g) for g in axis_sizes)
+    if len(grid) != nd - 1:
+        raise ValueError(
+            f"{nd}-D pencil needs exactly {nd - 1} mesh axes (one "
+            f"device-grid factor per sharded leading axis of "
+            f"shape={shape}); got {len(grid)} axes of sizes {grid}")
+    return grid
+
+
+def pencil_r2c_half(shape, grid, impl: str):
+    """The packed half-width pencil shape for a real-input transform, or
+    None when the flop-halved path cannot apply (tiny last axis, non-GEMM
+    impl, or a final exchange leg that cannot split the half width).
+
+    The r2c pencil rides the rfftn packing: the contiguous pass transforms
+    n_last/2 packed complex points, every exchange leg moves the half
+    width, and ONE N-D untangle on the global result recovers the real
+    spectrum — flop- and byte-halved end to end (DESIGN.md §14).
+    """
+    shape = tuple(int(d) for d in shape)
+    m = shape[-1] // 2
+    if impl != "matfft" or shape[-1] < 4:
+        return None
+    half = (*shape[:-1], m)
+    grid = tuple(int(g) for g in grid)
+    for k, g in enumerate(grid):  # every leg must split the half volume
+        if half[k] % g or half[k + 1] % g:
+            return None
+    return half
+
+
+def plan_pencil(shape, num_devices: int, *, grid=None,
                 chunks: int | None = None) -> PencilPlan:
     shape = tuple(int(d) for d in shape)
-    n0, n1 = shape
+    if len(shape) < 2:
+        raise ValueError(f"pencil decomposition needs >= 2 axes, "
+                         f"got shape={shape}")
     fft_plan.log2i(num_devices)
-    if n0 % num_devices or n1 % num_devices:
+    if grid is None:
+        grid = pencil_grid(shape, num_devices)
+    grid = tuple(int(g) for g in grid)
+    if math.prod(grid) != num_devices:
         raise ValueError(
-            f"pencil decomposition needs D | n0 and D | n1, got "
-            f"shape={shape}, D={num_devices}")
-    return PencilPlan(shape=shape, d=num_devices, chunks=chunks)
+            f"pencil device grid {grid} must multiply to the device count "
+            f"D={num_devices}")
+    for g in grid:
+        fft_plan.log2i(g)
+    for k, g in enumerate(grid):
+        # leg k shards axis k on input and splits axis k+1 on exchange
+        if shape[k] % g or shape[k + 1] % g:
+            raise ValueError(
+                f"pencil decomposition needs grid[{k}]={g} to divide both "
+                f"axis {k} (the input shard) and axis {k + 1} (the "
+                f"exchange split) of shape={shape}")
+    return PencilPlan(shape=shape, d=num_devices, grid=grid, chunks=chunks)
 
 
 def _resolve_overlap_knob(n_total: int, num_devices: int, slab_widths,
@@ -207,16 +299,19 @@ def _resolve_overlap_knob(n_total: int, num_devices: int, slab_widths,
     return overlap
 
 
-def resolve_overlap_pencil(shape, num_devices: int, overlap) -> int | None:
-    """Resolve the ``overlap`` knob for the 2-D pencil exchange: chunks
-    must divide the per-device slab width of the ONE exchange (n1/D)."""
+def resolve_overlap_pencil(shape, num_devices: int, overlap, *,
+                           grid=None) -> int | None:
+    """Resolve the ``overlap`` knob for the pencil exchanges: chunks must
+    divide every per-leg per-device slab width shape[k+1]/grid[k] (for
+    2-D that is the familiar n1/D of the ONE exchange)."""
     shape = tuple(int(d) for d in shape)
-    plan = plan_pencil(shape, num_devices)
-    n1l = shape[1] // num_devices
+    plan = plan_pencil(shape, num_devices, grid=grid)
+    widths = tuple(shape[k + 1] // g for k, g in enumerate(plan.grid))
     return _resolve_overlap_knob(
-        plan.n, num_devices, (n1l,), overlap,
-        f"the per-device exchange slab width n1/D={n1l} "
-        f"(shape={shape}, D={num_devices})")
+        plan.n, max(plan.grid), widths, overlap,
+        f"every per-leg exchange slab width "
+        f"{'n1/D=%d' % widths[0] if len(widths) == 1 else widths} "
+        f"(shape={shape}, grid={plan.grid})")
 
 
 def resolve_overlap(n: int, num_devices: int, overlap) -> int | None:
@@ -451,117 +546,251 @@ def build_distributed(n: int, mesh: Mesh, axis_names=("data", "model"), *,
                             out_specs=(spec, spec), check_vma=False)
 
 
-def build_pencil(shape, mesh: Mesh, axis_names=("data", "model"), *,
-                 impl: str = "matfft", interpret: bool | None = None,
-                 layout: str = "zero_copy", batch_tile: int | None = None,
-                 overlap: int | None = None):
-    """Build the shard_map'd 2-D pencil transform for an (n0, n1) image.
+def _pencil_groups(shape, mesh: Mesh, axis_names):
+    """Mesh-axis group per exchange leg + the resulting device grid.
 
-    Data layout (D devices, planar re/im):
-
-      input   (n0, n1) sharded by rows: device d owns rows
-              [d*n0/D, (d+1)*n0/D)
-      pass 1  local FFT of each row (contiguous axis, level 0/1 kernels)
-      xchg    split cols, concat rows -> (n0, n1/D): full columns arrive
-              (the ONE exchange; all_to_all or the chunked ppermute ring)
-      pass 2  local FFT of each column via the shared axis-pass kernel,
-              column-major store -> (n0, n1/D) stays in natural layout
-
-    The output is the full natural-order 2-D spectrum, sharded by COLUMNS
-    (out_specs P(None, ax)) — the standard pencil re-distribution. Both
-    exchange engines are bitwise-identical transforms, same as the 1-D
-    engines (the slab kernels issue exactly the monolithic GEMMs).
-
-    ``overlap`` is the RESOLVED chunk count (`resolve_overlap_pencil`).
-    Returns the shard-mapped function over planar (n0, n1) global arrays;
-    the caller (the planner) wraps it in ONE `jax.jit` and caches it.
+    2-D: every mesh axis flattens into ONE exchange ring (PR-5 layout).
+    3-D: exactly one mesh axis per sharded leading axis — leg k rotates
+    over its own sub-ring while the other grid axis stays put, so the two
+    legs' collectives are independent D_k-way transposes.
     """
     if isinstance(axis_names, str):
         axis_names = (axis_names,)
-    d = _axis_size(mesh, axis_names)
-    plan = plan_pencil(shape, d, chunks=overlap)
-    n0, n1 = plan.shape
-    n0l, n1l = n0 // d, n1 // d
-    ax = tuple(axis_names)
-    if overlap is not None and n1l % overlap:
-        raise ValueError(
-            f"overlap={overlap} does not divide the exchange slab width "
-            f"n1/D={n1l}")
+    names = tuple(axis_names)
+    nd = len(shape)
+    if nd == 2:
+        groups = (names,)
+    else:
+        if len(names) != nd - 1:
+            raise ValueError(
+                f"{nd}-D pencil needs exactly {nd - 1} mesh axes (one "
+                f"device-grid axis per sharded leading axis of "
+                f"shape={tuple(shape)}); got axes {names}")
+        groups = tuple((a,) for a in names)
+    grid = tuple(_axis_size(mesh, g) for g in groups)
+    return groups, grid
 
-    def pass1(xr_loc, xi_loc):
-        """Rows pass on the local (n0l, n1) shard: the contiguous axis."""
-        return fft_ex.fft(xr_loc, xi_loc, impl=impl, interpret=interpret,
-                          batch_tile=batch_tile, layout=layout)
 
-    def pass2(br, bi, col_offset=0, ncols=None):
-        """Column pass on the assembled (n0, n1l) pencil, col-major store
-        so the result stays in natural (n0, cols) layout."""
-        return fft_ex.fft_cols(br, bi, impl=impl, interpret=interpret,
-                               col_tile=batch_tile, layout=layout,
-                               out_major="col", col_offset=col_offset,
-                               ncols=ncols)
+def _pencil_legs(shape, grid, groups, *, impl, interpret, layout,
+                 batch_tile, overlap):
+    """Build the exchange-legs closure shared by the c2c and r2c pencils.
 
-    def local_monolithic(xr_loc, xi_loc):
-        ar, ai = pass1(xr_loc, xi_loc)
+    Input: device-local planar arrays of shape ``loc0`` = per-axis
+    ``shape[i]/grid[i]`` for the sharded leading axes, full last axis —
+    already transformed along the contiguous axis by the caller. Runs
+    legs k = nd-2 .. 0 (exactly local fftn's axis order, so the composed
+    transform is bitwise-equal to the local oracle): exchange leg k
+    re-shards transformed axis k+1 over grid[k] and assembles full axis
+    k, then the axis-k pass runs on the shared axis-pass kernel with a
+    column-major store. Each leg uses the monolithic all_to_all or the
+    chunked ppermute ring (both bitwise-identical: the slab kernels issue
+    exactly the monolithic GEMMs via col_offset/ncols).
+    """
+    shape = tuple(int(x) for x in shape)
+    nd = len(shape)
+    loc0 = tuple(shape[i] // grid[i] for i in range(nd - 1)) + (shape[-1],)
 
-        def a2a(a):  # the one exchange: split cols, concat rows
-            return lax.all_to_all(a, ax, split_axis=1, concat_axis=0,
+    def axis_k_pass(ar, ai, S, k, col_offset=0, ncols=None):
+        """Transform axis k of the local planar volume S via the shared
+        axis-pass primitive ((B, L, C) view, col-major store), reshaped
+        back to volume form (a slab pass narrows axis k+1 to the slab)."""
+        B, L, C = math.prod(S[:k]), S[k], math.prod(S[k + 1:])
+        nc = C - col_offset if ncols is None else ncols
+        yr, yi = fft_ex.axis_pass(ar, ai, (B, L, C), out_major="col",
+                                  impl=impl, interpret=interpret,
+                                  col_tile=batch_tile, layout=layout,
+                                  col_offset=col_offset, ncols=nc)
+        rest = math.prod(S[k + 2:])
+        out_shape = (*S[:k], L, nc // rest, *S[k + 2:])
+        return yr.reshape(out_shape), yi.reshape(out_shape)
+
+    def monolithic_leg(ar, ai, S, k):
+        g = groups[k]
+
+        def a2a(a):  # re-pencil: split transformed axis k+1, concat axis k
+            return lax.all_to_all(a, g, split_axis=k + 1, concat_axis=k,
                                   tiled=True)
 
-        br, bi = a2a(ar), a2a(ai)  # (n0, n1l): full columns on-device
-        return pass2(br, bi)
+        ar, ai = a2a(ar), a2a(ai)
+        S = list(S)
+        S[k + 1] //= grid[k]
+        S[k] *= grid[k]
+        S = tuple(S)
+        ar, ai = axis_k_pass(ar, ai, S, k)
+        return ar, ai, S
 
-    def local_overlapped(xr_loc, xi_loc):
-        k = overlap
-        n1c = n1l // k
-        didx = lax.axis_index(ax)
-        ar, ai = pass1(xr_loc, xi_loc)
-        zeros = _zeros_planar
+    def overlapped_leg(ar, ai, S, k):
+        kc = overlap
+        dk, g = grid[k], groups[k]
+        didx = lax.axis_index(g)
+        w = shape[k + 1] // dk      # per-dest slab width on axis k+1
+        wc = w // kc
+        accS = list(S)
+        accS[k] = S[k] * dk         # full transformed axis k assembles
+        accS[k + 1] = w
+        accS = tuple(accS)
+        rest = math.prod(accS[k + 2:])
 
         def ring(take, place, bufs):  # the shared rotation schedule
-            return _ring(d, ax, didx, take, place, bufs)
+            return _ring(dk, g, didx, take, place, bufs)
 
-        # xchg slab c: global columns didx*n1l + c-slab of pass-1 output
+        # xchg slab c: sub-ring member ``dest``'s global axis-(k+1)
+        # columns [dest*w + c*wc, ... + wc) of this leg's input
         def take(c):
             def take_(dest):
-                start = dest * n1l + c * n1c
-                return (lax.dynamic_slice(ar, (0, start), (n0l, n1c)),
-                        lax.dynamic_slice(ai, (0, start), (n0l, n1c)))
+                start = [0] * nd
+                start[k + 1] = dest * w + c * wc
+                sizes = list(S)
+                sizes[k + 1] = wc
+                return (lax.dynamic_slice(ar, tuple(start), tuple(sizes)),
+                        lax.dynamic_slice(ai, tuple(start), tuple(sizes)))
             return take_
 
         def place(c):
             def place_(bufs, piece, s):
-                # source s owns global rows [s*n0l, (s+1)*n0l)
-                at = (s * n0l, c * n1c)
+                # source s owns axis-k block [s*S[k], (s+1)*S[k])
+                at = [0] * nd
+                at[k] = s * S[k]
+                at[k + 1] = c * wc
+                at = tuple(at)
                 return (lax.dynamic_update_slice(bufs[0], piece[0], at),
                         lax.dynamic_update_slice(bufs[1], piece[1], at))
             return place_
 
         # Software pipeline (double buffer): slab c+1's ppermute rounds
-        # are issued before slab c's column FFT, so the transfer has a
-        # full kernel's worth of MXU compute to hide behind. Pass-2 slab
-        # c reads the accumulator SNAPSHOT taken before ring c+1 merges
+        # are issued before slab c's axis pass, so the transfer has a
+        # full kernel's worth of MXU compute to hide behind. The pass
+        # reads the accumulator SNAPSHOT taken before ring c+1 merges
         # in (slab c's columns are already final there) — reading the
         # merged value instead would add a ring(c+1) -> fft(c) dataflow
         # edge and re-expose one slab per exchange. The kernel fetches
         # only the slab's columns via its col_offset BlockSpec, so every
         # slab issues exactly the monolithic GEMMs (bitwise-gated).
-        acc = ring(take(0), place(0), zeros((n0, n1l)))
-        out = zeros((n0, n1l))
-        for c in range(k):
+        acc = ring(take(0), place(0), _zeros_planar(accS))
+        out = _zeros_planar(accS)
+        for c in range(kc):
             cur = acc
-            if c + 1 < k:
+            if c + 1 < kc:
                 acc = ring(take(c + 1), place(c + 1), acc)
-            cr, ci = pass2(cur[0], cur[1], col_offset=c * n1c, ncols=n1c)
-            out = (lax.dynamic_update_slice(out[0], cr, (0, c * n1c)),
-                   lax.dynamic_update_slice(out[1], ci, (0, c * n1c)))
-        return out
+            cr, ci = axis_k_pass(cur[0], cur[1], accS, k,
+                                 col_offset=c * wc * rest,
+                                 ncols=wc * rest)
+            at = [0] * nd
+            at[k + 1] = c * wc
+            out = (lax.dynamic_update_slice(out[0], cr, tuple(at)),
+                   lax.dynamic_update_slice(out[1], ci, tuple(at)))
+        return out[0], out[1], accS
 
-    local = local_monolithic if overlap is None else local_overlapped
-    in_spec = P(ax, None)     # row-sharded input pencils
-    out_spec = P(None, ax)    # column-sharded output pencils
+    leg = monolithic_leg if overlap is None else overlapped_leg
+
+    def legs(ar, ai):
+        S = loc0
+        for k in range(nd - 2, -1, -1):
+            ar, ai, S = leg(ar, ai, S, k)
+        return ar, ai
+
+    return legs, loc0
+
+
+def build_pencil(shape, mesh: Mesh, axis_names=("data", "model"), *,
+                 impl: str = "matfft", interpret: bool | None = None,
+                 layout: str = "zero_copy", batch_tile: int | None = None,
+                 overlap: int | None = None):
+    """Build the shard_map'd N-D pencil transform for an (n0, .., nk) volume.
+
+    Data layout (device grid per `_pencil_groups`, planar re/im):
+
+      input   leading axes sharded over the grid (2-D: rows over D; 3-D:
+              axis 0 over d0, axis 1 over d1), last axis contiguous
+      pass    local FFT of each row (contiguous axis, level 0/1 kernels)
+      legs    ndim-1 re-pencil exchanges, axis nd-2 down to axis 0: each
+              leg re-shards the just-transformed axis and assembles the
+              next, then FFTs it via the shared axis-pass kernel with a
+              column-major store (all_to_all or the chunked ppermute ring)
+
+    The output is the full natural-order N-D spectrum with the SAME grid
+    rotated one axis right (out_specs P(None, *groups)) — the standard
+    pencil re-distribution. Both exchange engines are bitwise-identical
+    transforms, same as the 1-D engines, and the leg order matches local
+    `fftn` exactly so the composed result is bitwise vs the local oracle.
+
+    ``overlap`` is the RESOLVED chunk count (`resolve_overlap_pencil`).
+    Returns the shard-mapped function over planar global volumes; the
+    caller (the planner) wraps it in ONE `jax.jit` and caches it.
+    """
+    shape = tuple(int(x) for x in shape)
+    groups, grid = _pencil_groups(shape, mesh, axis_names)
+    d = math.prod(grid)
+    plan_pencil(shape, d, grid=grid, chunks=overlap)  # validate
+    if overlap is not None:
+        widths = [shape[k + 1] // grid[k] for k in range(len(shape) - 1)]
+        if any(w % overlap for w in widths):
+            raise ValueError(
+                f"overlap={overlap} does not divide every exchange slab "
+                f"width {widths} (shape={shape}, grid={grid})")
+    legs, _ = _pencil_legs(shape, grid, groups, impl=impl,
+                           interpret=interpret, layout=layout,
+                           batch_tile=batch_tile, overlap=overlap)
+
+    def local(xr_loc, xi_loc):
+        # contiguous-axis pass on the local shard (leading axes = batch)
+        ar, ai = fft_ex.fft(xr_loc, xi_loc, impl=impl, interpret=interpret,
+                            batch_tile=batch_tile, layout=layout)
+        return legs(ar, ai)
+
+    in_spec = P(*groups, None)    # leading axes sharded over the grid
+    out_spec = P(None, *groups)   # grid rotated one axis right
     # check_vma=False: pallas_call out_shapes do not carry vma metadata.
     return compat.shard_map(local, mesh=mesh, in_specs=(in_spec, in_spec),
+                            out_specs=(out_spec, out_spec), check_vma=False)
+
+
+def build_pencil_r2c(shape, mesh: Mesh, axis_names=("data", "model"), *,
+                     impl: str = "matfft", interpret: bool | None = None,
+                     layout: str = "zero_copy",
+                     batch_tile: int | None = None,
+                     overlap: int | None = None):
+    """Flop-halved real-input pencil: the rfftn packing, distributed.
+
+    The local contiguous pass consumes each real row as n_last/2 packed
+    complex points (`executors.rfft_pack_pass` — literally the same
+    kernels as the local rfftn fast path), then the SAME exchange legs as
+    `build_pencil` run on the half-width volume, halving every leg's
+    collective bytes and every axis pass's GEMMs. The result is the RAW
+    packed half spectrum, grid-rotated like the c2c pencil; the caller
+    (the planner) applies the ONE N-D untangle on the global array —
+    outside the shard_map, exactly where local rfftn applies it, so the
+    composed transform is bitwise-equal to the local `rfftn` oracle.
+
+    Only valid when `pencil_r2c_half(shape, grid, impl)` is non-None;
+    ``overlap`` is resolved against the HALF shape. Returns the
+    shard-mapped function real (n0, .., n_last) -> planar half volumes.
+    """
+    shape = tuple(int(x) for x in shape)
+    groups, grid = _pencil_groups(shape, mesh, axis_names)
+    d = math.prod(grid)
+    half = pencil_r2c_half(shape, grid, impl)
+    if half is None:
+        raise ValueError(
+            f"no flop-halved r2c pencil for shape={shape}, grid={grid}, "
+            f"impl={impl!r} (see pencil_r2c_half)")
+    plan_pencil(half, d, grid=grid, chunks=overlap)  # validate
+    legs, loc0 = _pencil_legs(half, grid, groups, impl=impl,
+                              interpret=interpret, layout=layout,
+                              batch_tile=batch_tile, overlap=overlap)
+    n_last = shape[-1]
+
+    def local(x_loc):
+        rows2 = math.prod(loc0[:-1])
+        zr, zi = fft_ex.rfft_pack_pass(
+            x_loc.reshape(rows2, n_last), n_last, impl=impl,
+            interpret=interpret, batch_tile=batch_tile, layout=layout)
+        return legs(zr.reshape(loc0), zi.reshape(loc0))
+
+    in_spec = P(*groups, None)
+    out_spec = P(None, *groups)
+    # check_vma=False: pallas_call out_shapes do not carry vma metadata.
+    return compat.shard_map(local, mesh=mesh, in_specs=(in_spec,),
                             out_specs=(out_spec, out_spec), check_vma=False)
 
 

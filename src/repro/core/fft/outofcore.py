@@ -196,7 +196,8 @@ class OocPlan:
 
 
 def factor_out_of_core(n: int, budget_bytes: int,
-                       block_bytes: int | None = None) -> OocPlan:
+                       block_bytes: int | None = None,
+                       panel_scale: int = 1) -> OocPlan:
     """Factor n = n1 * n2 and size the streaming panels against the budget.
 
     The memory-budget rule: WS_PANELS concurrent panels must fit, so
@@ -206,10 +207,21 @@ def factor_out_of_core(n: int, budget_bytes: int,
     ``block_bytes`` is given, t2 additionally aligns so each pass-1
     panel is a whole number of store blocks (jobs read block-granular,
     never split a block).
+
+    ``panel_scale`` (pow2 >= 1) shrinks BOTH panel heights by that
+    factor below the budget-maximal choice — the autotuner's OOC knob:
+    smaller panels trade per-job overhead for earlier first-byte and a
+    smaller resident set (repro.fft.tuner measures the trade on the
+    deterministic disk model; panel_scale=1 is the analytic default).
     """
+    scale = int(panel_scale)
+    if scale < 1 or scale & (scale - 1):
+        raise ValueError(
+            f"panel_scale must be a power of two >= 1, got {panel_scale}")
     n1, n2 = _near_square_split(n)
     row_bytes = _C64 * n1
-    t2 = _pow2_floor(min(budget_bytes // (WS_PANELS * row_bytes), n2))
+    t2 = _pow2_floor(min(budget_bytes // (WS_PANELS * row_bytes),
+                         n2)) // scale
     if block_bytes is not None and t2 >= 1 \
             and (row_bytes * t2) % block_bytes:
         # a panel is row_bytes * 2^k: if the largest affordable k fails,
@@ -218,8 +230,14 @@ def factor_out_of_core(n: int, budget_bytes: int,
             f"store block_bytes={block_bytes} does not tile the pass-1 "
             f"panel ({row_bytes * t2} B = {t2} rows of {row_bytes} B); "
             f"ingest with a block size that divides the panel")
-    t1 = _pow2_floor(min(budget_bytes // (WS_PANELS * _C64 * n2), n1))
+    t1 = _pow2_floor(min(budget_bytes // (WS_PANELS * _C64 * n2),
+                         n1)) // scale
     if t2 < 1 or t1 < 1:
+        if scale > 1:
+            raise ValueError(
+                f"panel_scale={scale} shrinks the streaming panels below "
+                f"one row for n={n} under budget_bytes={budget_bytes}; "
+                f"use a smaller scale")
         need = WS_PANELS * _C64 * max(n1, n2)
         raise ValueError(
             f"memory budget {budget_bytes} B cannot hold even one "
@@ -809,10 +827,12 @@ class OutOfCorePlan:
 def plan_out_of_core(n: int, store: BlockStore, work_dir: os.PathLike,
                      budget_bytes: int, impl: str = "ref",
                      config: JobConfig | None = None,
-                     verify: str = "off") -> OutOfCorePlan:
+                     verify: str = "off",
+                     panel_scale: int = 1) -> OutOfCorePlan:
     """Factor + bind: the `placement="out_of_core"` entry point."""
     factors = factor_out_of_core(n, budget_bytes,
-                                 block_bytes=store.block_bytes)
+                                 block_bytes=store.block_bytes,
+                                 panel_scale=panel_scale)
     return OutOfCorePlan(factors, store, work_dir, impl=impl, config=config,
                          verify=verify)
 

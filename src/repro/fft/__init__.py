@@ -20,11 +20,22 @@ wrappers.
 Placements scale the same call from one core to the full mesh:
 "local" (level-0/1 kernels), "segmented" (the paper's map-only regime,
 zero collectives), "distributed" (1-D cross-device four-step over three
-exchanges; 2-D pencil decomposition over ONE exchange); "auto" picks from
-shape, batch_shape, and mesh size. "out_of_core" streams a single huge
-1-D c2c whose operand lives in a `BlockStore` through the two-pass
-four-step under a host memory budget (``plan(..., store=, work_dir=,
+exchanges; N-D pencil decomposition over ``ndim-1`` re-pencil exchange
+legs — a 3-D volume on a 2-axis mesh runs two, with per-leg
+collective-byte accounting; r2c pencils stream the PACKED half-width
+volume, halving flops and exchange bytes); "auto" picks from shape,
+batch_shape, and mesh size. "out_of_core" streams a single huge 1-D c2c
+whose operand lives in a `BlockStore` through the two-pass four-step
+under a host memory budget (``plan(..., store=, work_dir=,
 budget_bytes=)`` -> `core.fft.outofcore.OutOfCorePlan`).
+
+``plan(..., tune=True)`` turns on the measuring autotuner (DESIGN.md
+§14): plan time sweeps the real candidate space — exchange engine,
+layout, batch tile, out-of-core panel height — on small representative
+shards, picks the winner by measurement, and persists it as wisdom
+(``wisdom_path=``, default ``~/.cache/repro_fft/wisdom.json``). A wisdom
+hit is a pure lookup: zero measurements, zero retraces, counted in
+``cache_info()["wisdom_hits"]``.
 
 The deprecated per-call entry points (`repro.kernels.fft.ops.fft` etc.)
 are thin shims over this facade. Smoke-check with
@@ -37,6 +48,8 @@ from repro.fft.planner import (ExecutablePlan, cache_info, clear_plan_cache,
                                fft2, ifft2, invalidate_mesh, irfft2, plan,
                                rfft2)
 from repro.fft.spec import MAX_LOCAL_N, FftSpec, resolve_placement
+from repro.fft.tuner import (TuneConfig, TuneReport, WisdomStore,
+                             tune_stats, reset_tune_stats)
 
 __all__ = [
     "ExecutablePlan",
@@ -53,5 +66,10 @@ __all__ = [
     "irfft2",
     "plan",
     "resolve_placement",
+    "reset_tune_stats",
     "rfft2",
+    "TuneConfig",
+    "TuneReport",
+    "tune_stats",
+    "WisdomStore",
 ]

@@ -379,6 +379,28 @@ def irfft(yr: jnp.ndarray, yi: jnp.ndarray, *, impl: str = "matfft",
 # true N-D transforms: axis passes, no outer twiddle (the DFT is separable)
 
 
+def rfft_pack_pass(x2: jnp.ndarray, n_last: int, *, impl: str = "matfft",
+                   interpret: bool | None = None,
+                   batch_tile: int | None = None,
+                   layout: str = "zero_copy") -> Planar:
+    """Contiguous-axis pass of the rfftn fast path: (rows, n_last) real
+    rows -> (rows, n_last//2) RAW packed half spectrum (no untangle).
+
+    Shared by the local `rfftn` and the distributed r2c pencil
+    (`core.fft.distributed.build_pencil_r2c`) so both issue literally the
+    same kernels — the bitwise gate between them depends on it.
+    """
+    m = n_last // 2
+    if fft_plan.make_plan(m).levels == 1:
+        return rfft_pack_leaf(x2, batch_tile=batch_tile,
+                              interpret=_auto_interpret(interpret))
+    # n_last > 2*MAX_LEAF: the half transform is level-1; pack on the
+    # host (one extra round trip, counted by plan.rfftn_hbm_bytes)
+    z = x2.reshape(x2.shape[0], m, 2)
+    return fft(z[..., 0], z[..., 1], impl=impl, interpret=interpret,
+               batch_tile=batch_tile, layout=layout)
+
+
 def _flip_leading(pr, pi, ndim: int, nd: int):
     """Index-negate (k -> (-k) mod n) every transformed axis but the last."""
     for ax in range(ndim - nd, ndim - 1):
@@ -493,15 +515,8 @@ def rfftn(x: jnp.ndarray, shape, *, impl: str = "matfft",
     # pass over the contiguous axis: packed half-length transform, raw
     # (un-untangled) half spectrum out
     x2 = x.reshape(rows * math.prod(shape[:-1]), n_last)
-    if fft_plan.make_plan(m).levels == 1:
-        zr, zi = rfft_pack_leaf(x2, batch_tile=batch_tile,
-                                interpret=_auto_interpret(interpret))
-    else:
-        # n_last > 2*MAX_LEAF: the half transform is level-1; pack on the
-        # host (one extra round trip, counted by plan.rfftn_hbm_bytes)
-        z = x2.reshape(x2.shape[0], m, 2)
-        zr, zi = fft(z[..., 0], z[..., 1], impl=impl, interpret=interpret,
-                     batch_tile=batch_tile, layout=layout)
+    zr, zi = rfft_pack_pass(x2, n_last, impl=impl, interpret=interpret,
+                            batch_tile=batch_tile, layout=layout)
     zr = zr.reshape(*batch, *half)
     zi = zi.reshape(*batch, *half)
 

@@ -39,7 +39,12 @@ from repro.kernels.fft import plan as kplan
 _F32 = 4  # bytes per planar float32 element
 
 _PLAN_CACHE: dict = {}
-_CACHE_INFO = {"hits": 0, "misses": 0, "invalidations": 0}
+# wisdom_hits counts tuner wisdom-file lookups that skipped measurement
+# (tuner.py). A wisdom hit that still BUILDS a new ExecutablePlan is a
+# plan-cache miss — the two counters answer different questions ("did we
+# re-measure?" vs "did we re-trace?") and are never conflated.
+_CACHE_INFO = {"hits": 0, "misses": 0, "invalidations": 0,
+               "wisdom_hits": 0}
 # map-only jobs plan() from ThreadPoolExecutor workers (core/pipeline):
 # the check-then-act on the cache must be atomic or the first same-shaped
 # blocks each build (and later compile) their own plan
@@ -68,6 +73,9 @@ class ExecutablePlan:
         self._fast_r2c = (spec.kind == "r2c" and spec.impl == "matfft"
                           and spec.shape[-1] >= 4
                           and spec.placement != "distributed")
+        # flop-halved distributed r2c: the packed half-width pencil
+        # (DESIGN.md §14); set below when the grid admits it
+        self._fast_r2c_pencil = False
         #: cross-device plan (distributed placement only)
         self.dist = None
         if spec.placement == "distributed":
@@ -82,10 +90,20 @@ class ExecutablePlan:
                 # pass — global n can exceed MAX_LEAF**2, each pass can't
                 local_n = max(self.dist.n1, self.dist.n2)
             else:
-                from repro.core.fft.distributed import plan_pencil
-                self.dist = plan_pencil(spec.shape, num_devices,
+                from repro.core.fft.distributed import (pencil_grid,
+                                                        pencil_r2c_half,
+                                                        plan_pencil)
+                axis_sizes = tuple(mesh.shape[a] for a in spec.axes)
+                grid = pencil_grid(spec.shape, num_devices, axis_sizes)
+                eff_shape = spec.shape
+                if spec.kind == "r2c":
+                    half = pencil_r2c_half(spec.shape, grid, spec.impl)
+                    if half is not None:
+                        self._fast_r2c_pencil = True
+                        eff_shape = half
+                self.dist = plan_pencil(eff_shape, num_devices, grid=grid,
                                         chunks=chunks)
-                local_n = max(spec.shape)
+                local_n = max(eff_shape)
         elif spec.ndim == 1:
             local_n = spec.n // 2 if self._fast_r2c else spec.n
         else:
@@ -175,7 +193,7 @@ class ExecutablePlan:
         n = s.n
         if n <= 1:
             return 0.0
-        if not self._fast_r2c:
+        if not (self._fast_r2c or self._fast_r2c_pencil):
             return 5.0 * n * math.log2(n)
         m = s.shape[-1] // 2
         if s.ndim == 1:
@@ -199,8 +217,9 @@ class ExecutablePlan:
         if s.ndim > 1:
             # per-axis passes; identical for local / segmented / pencil
             # placements (the pencil runs exactly the local GEMMs)
-            width = s.n // 2 if self._fast_r2c else s.n
-            last = s.shape[-1] // 2 if self._fast_r2c else s.shape[-1]
+            fast = self._fast_r2c or self._fast_r2c_pencil
+            width = s.n // 2 if fast else s.n
+            last = s.shape[-1] // 2 if fast else s.shape[-1]
             macs = ((width // max(last, 1))
                     * kplan.make_plan(max(last, 1)).gemm_macs)
             for ax_len in s.shape[:-1]:
@@ -225,12 +244,21 @@ class ExecutablePlan:
             plane = _F32 * s.n
             per_pass = 2 * 2 * plane
             if s.ndim > 1:
-                # pencil: two local passes + the ONE exchange's buffers
-                # landing in HBM (one round-trip); the r2c slice path adds
-                # the one-sided write
-                bytes_ = 2 * per_pass + 1 * per_pass
+                # pencil: ndim local passes + each of the ndim-1 exchange
+                # legs' buffers landing in HBM (one round-trip per leg)
+                legs = s.ndim - 1
+                m1 = s.shape[-1] // 2 + 1
+                if self._fast_r2c_pencil:
+                    # every pass and leg moves the packed HALF volume; the
+                    # global untangle re-reads the half planes and writes
+                    # the m+1-bin one-sided spectrum (DESIGN.md §14)
+                    half_pass = per_pass // 2
+                    return ((s.ndim + legs) * half_pass
+                            + 2 * _F32 * (s.n // 2)
+                            + 2 * _F32 * (s.n // s.shape[-1]) * m1)
+                bytes_ = s.ndim * per_pass + legs * per_pass
                 if s.kind == "r2c":
-                    m1 = s.shape[-1] // 2 + 1
+                    # legacy c2c + one-sided slice fallback
                     bytes_ += 2 * _F32 * (s.n // s.shape[-1]) * m1
                 return bytes_
             # 1-D: two local passes, each read 2 planes + write 2 planes,
@@ -287,6 +315,26 @@ class ExecutablePlan:
         """Collective bytes the chunked ppermute pipeline overlaps with
         local MXU compute (the predicted overlap win's numerator)."""
         return self.collective_bytes - self.exposed_collective_bytes
+
+    @property
+    def per_leg_collective_bytes(self) -> tuple:
+        """Total payload crossing ICI per exchange leg, in leg order
+        (pencil: axis nd-2 first; 1-D: the three four-step exchanges).
+        Sums to `collective_bytes`; () for non-distributed plans. The
+        tuner ranks candidates against this per-leg accounting."""
+        if self.dist is None:
+            return ()
+        return tuple(self.dist.d * b
+                     for b in self.dist.per_leg_bytes_per_device)
+
+    @property
+    def per_leg_exposed_collective_bytes(self) -> tuple:
+        """Per-leg structurally exposed (fill/drain) payload; sums to
+        `exposed_collective_bytes` up to integer division."""
+        if self.dist is None:
+            return ()
+        return tuple(self.dist.d * b
+                     for b in self.dist.per_leg_exposed_bytes_per_device)
 
     @property
     def verify_flops(self) -> float:
@@ -374,22 +422,40 @@ class ExecutablePlan:
                 overlap=None if s.overlap == "off" else s.overlap)
         else:
             from repro.core.fft import distributed
-            pencil = distributed.build_pencil(
-                s.shape, self.mesh, s.axes, impl=s.impl,
-                interpret=s.interpret, layout=s.layout,
+            build_kw = dict(
+                impl=s.impl, interpret=s.interpret, layout=s.layout,
                 batch_tile=s.batch_tile,
                 overlap=None if s.overlap == "off" else s.overlap)
             if s.kind == "c2c":
-                inner = pencil
+                inner = distributed.build_pencil(s.shape, self.mesh,
+                                                 s.axes, **build_kw)
+            elif self._fast_r2c_pencil:
+                half_pencil = distributed.build_pencil_r2c(
+                    s.shape, self.mesh, s.axes, **build_kw)
+                vr, vi = (jnp.asarray(a)
+                          for a in kplan.rfft_twiddle(s.shape[-1]))
+                nd = s.ndim
+
+                def inner(x):
+                    # flop-halved r2c pencil: the packed half-width volume
+                    # runs the contiguous pass + every exchange leg, and
+                    # the ONE N-D untangle runs on the GLOBAL half
+                    # spectrum outside the shard_map — exactly where the
+                    # local rfftn applies it, so this is bitwise vs the
+                    # local oracle (DESIGN.md §14)
+                    zr, zi = half_pencil(x)
+                    return executors._untangle_nd(zr, zi, vr, vi, nd)
             else:
+                pencil = distributed.build_pencil(s.shape, self.mesh,
+                                                  s.axes, **build_kw)
                 m1 = s.shape[-1] // 2 + 1
 
                 def inner(x):
-                    # r2c pencil rides the c2c engine: the packed-real
-                    # halving doesn't compose with the exchange's column
-                    # split, so transform the real input as c2c and slice
-                    # the one-sided spectrum (global slice, outside the
-                    # shard_map — still exactly one exchange leg)
+                    # fallback r2c pencil (grid cannot split the half
+                    # width, or non-GEMM impl): ride the c2c engine and
+                    # slice the one-sided spectrum (global slice, outside
+                    # the shard_map — same exchange-leg count, not
+                    # flop-halved)
                     yr, yi = pencil(x, jnp.zeros_like(x))
                     return yr[..., :m1], yi[..., :m1]
 
@@ -592,7 +658,8 @@ def plan(kind: str = "c2c", *, n: int | None = None, shape=None,
          axes=None, natural_order: bool = True,
          fuse_twiddle: bool = False, overlap="auto",
          r2c_axis: int = -1, fallback: str = "error",
-         verify: str = "off",
+         verify: str = "off", tune: bool = False, wisdom_path=None,
+         tune_config=None,
          store=None, work_dir=None, budget_bytes: int | None = None,
          job_config=None):
     """Resolve a transform spec and return the cached `ExecutablePlan`.
@@ -645,6 +712,19 @@ def plan(kind: str = "c2c", *, n: int | None = None, shape=None,
         Resolved pre-cache-key, so verified and unverified plans are
         distinct cache entries; `verify_flops`/`verify_hbm_bytes`/
         `verify_overhead` report the mode's analytic cost.
+      tune: measure instead of model (DESIGN.md §14): the autotuner in
+        `repro.fft.tuner` times the real candidate space — overlap chunk
+        count + exchange engine, layout, batch tile (and OOC panel
+        heights) — on small representative shards, applies the winner's
+        knobs, and persists the decision as wisdom keyed on resolved
+        spec + mesh fingerprint + backend. A wisdom hit is a pure lookup:
+        zero measurement, zero retrace (counted by cache_info()'s
+        `wisdom_hits`). The tuned knobs resolve BEFORE the cache key, so
+        tuned and hand-specified-equivalent plans share one cache entry.
+      wisdom_path: wisdom file override (default
+        ~/.cache/repro_fft/wisdom.json); tune=True only.
+      tune_config: `tuner.TuneConfig` override (seed, repeats, injectable
+        timer/measurer, model constants); tune=True only.
 
     Same resolved spec (and mesh) -> the SAME plan object, with its jit'd
     executables and twiddle tables already built.
@@ -689,8 +769,19 @@ def plan(kind: str = "c2c", *, n: int | None = None, shape=None,
                 "holding the operand), work_dir= (tiles/manifests/output), "
                 "and budget_bytes= (the host working-set cap)")
         from repro.core.fft.outofcore import plan_out_of_core
+        panel_scale = 1
+        if tune:
+            from repro.fft import tuner
+            panel_scale, rep = tuner.tune_out_of_core(
+                int(n), int(budget_bytes), impl=impl,
+                block_bytes=getattr(store, "block_bytes", None),
+                wisdom_path=wisdom_path, config=tune_config)
+            if rep.wisdom_hit:
+                with _CACHE_LOCK:
+                    _CACHE_INFO["wisdom_hits"] += 1
         return plan_out_of_core(int(n), store, work_dir, int(budget_bytes),
-                                impl=impl, config=job_config, verify=verify)
+                                impl=impl, config=job_config, verify=verify,
+                                panel_scale=panel_scale)
     if store is not None or work_dir is not None or budget_bytes is not None:
         raise ValueError(
             "store=/work_dir=/budget_bytes= apply only to "
@@ -770,6 +861,29 @@ def plan(kind: str = "c2c", *, n: int | None = None, shape=None,
         num_devices = math.prod(mesh.shape[a] for a in axes)
     elif axes is not None:
         raise ValueError("axes= requires mesh=")
+    axis_sizes = (tuple(mesh.shape[a] for a in axes)
+                  if mesh is not None else None)
+
+    if tune:
+        # measure-then-plan: the tuner picks layout/batch_tile/overlap and
+        # the winning knobs resolve into the spec BEFORE the cache key —
+        # a later plan() with the same knobs spelled out is the same plan.
+        # A wisdom hit performs zero measurements and zero retraces.
+        from repro.fft import tuner
+        knobs, report = tuner.tune(
+            kind=kind, n=n, shape=shape, batch_shape=batch_shape,
+            mesh=mesh, axes=axes, num_devices=num_devices,
+            axis_sizes=axis_sizes, placement=placement, layout=layout,
+            impl=impl, precision=precision, interpret=interpret,
+            batch_tile=batch_tile, natural_order=natural_order,
+            fuse_twiddle=fuse_twiddle, overlap=overlap, r2c_axis=r2c_axis,
+            verify=verify, wisdom_path=wisdom_path, config=tune_config)
+        layout = knobs.get("layout", layout)
+        batch_tile = knobs.get("batch_tile", batch_tile)
+        overlap = knobs.get("overlap", overlap)
+        if report.wisdom_hit:
+            with _CACHE_LOCK:
+                _CACHE_INFO["wisdom_hits"] += 1
 
     try:
         resolved = spec_mod.resolve(
@@ -778,7 +892,7 @@ def plan(kind: str = "c2c", *, n: int | None = None, shape=None,
             precision=precision, interpret=interpret, batch_tile=batch_tile,
             num_devices=num_devices, axes=axes, natural_order=natural_order,
             fuse_twiddle=fuse_twiddle, overlap=overlap, r2c_axis=r2c_axis,
-            verify=verify)
+            verify=verify, axis_sizes=axis_sizes)
     except ValueError:
         # mesh-bound strategy unsatisfiable (e.g. too few devices for the
         # split): degrade walks the same chain instead of raising. A
@@ -865,14 +979,18 @@ def irfft2(yr, yi, shape=None, **kw):
 
 def cache_info() -> dict:
     """Process-level plan-cache stats:
-    {entries, hits, misses, invalidations, size}.
+    {entries, hits, misses, invalidations, wisdom_hits, size}.
 
     ``entries`` is the live plan count (``size`` kept as its legacy
     alias); ``invalidations`` counts plans dropped by `invalidate_mesh` /
-    `clear_plan_cache` over the process lifetime. Workloads that churn
-    the cache across phases (the out-of-core job's two pass lengths, the
-    degrade path's mesh drops) report this dict — launch/fft_job.py
-    carries it in every run report.
+    `clear_plan_cache` over the process lifetime. ``wisdom_hits`` counts
+    tune=True plans whose knobs came from the wisdom file with zero
+    measurement — distinct from ``hits``: a wisdom hit that still builds
+    a new ExecutablePlan is a plan-cache MISS (it re-traces), and only
+    lookups returning an existing plan object count as hits. Workloads
+    that churn the cache across phases (the out-of-core job's two pass
+    lengths, the degrade path's mesh drops) report this dict —
+    launch/fft_job.py carries it in every run report.
     """
     with _CACHE_LOCK:
         return {**_CACHE_INFO, "entries": len(_PLAN_CACHE),
@@ -906,3 +1024,4 @@ def clear_plan_cache() -> None:
         _CACHE_INFO["hits"] = 0
         _CACHE_INFO["misses"] = 0
         _CACHE_INFO["invalidations"] = 0
+        _CACHE_INFO["wisdom_hits"] = 0

@@ -28,6 +28,10 @@ Placement resolution (`placement="auto"`):
       fits one device          -> "local"
   otherwise                    -> ValueError
 
+(3-D pencil volumes are explicit-only — `placement="distributed"` with a
+mesh whose axes form the device grid; the auto heuristic cannot see mesh
+axis structure, so 3-D shapes that fit one device auto-place "local".)
+
 The spec is the plan-cache key (together with the mesh), so every field is
 normalized here: fields that don't apply to the resolved placement are
 forced to their defaults, and mesh axes are filtered to the axes the mesh
@@ -161,32 +165,45 @@ def _validate_distributed(n: int, num_devices: int, axes) -> None:
             f"block-sized transforms")
 
 
-def _validate_pencil(shape: tuple, num_devices: int, axes) -> None:
-    """The 2-D pencil decomposition constraints, surfaced early.
+def _validate_pencil(shape: tuple, num_devices: int, axes,
+                     grid=None) -> None:
+    """The N-D pencil decomposition constraints, surfaced early.
 
-    Input rows (axis 0) shard over D, and the single transpose exchange
-    splits the columns — so BOTH axes must be divisible by D. The column
-    pass runs as one kernel, so axis 0 additionally caps at MAX_LEAF.
+    Each exchange leg k shards axis k on input and splits axis k+1 — so
+    grid[k] must divide both (for the flattened 2-D grid, both axes must
+    be divisible by D). Every non-contiguous axis runs as one
+    column-kernel pass, so it caps at MAX_LEAF; the contiguous axis runs
+    the local level-0/1 path (MAX_LEAF**2).
     """
     if not kplan.is_pow2(num_devices):
         raise ValueError(
             f"distributed placement needs a power-of-two device count "
             f"along {axes}, got D={num_devices}")
-    n0, n1 = shape
+    if grid is None:
+        grid = (num_devices,) * (len(shape) - 1)
     for ax_i, d in enumerate(shape):
-        if d % num_devices:
+        # the grid factors touching axis i: leg i-1 splits it, leg i
+        # shards it — both must divide (2-D: the one flattened factor D)
+        for g in {grid[k] for k in (ax_i - 1, ax_i) if 0 <= k < len(grid)}:
+            if not kplan.is_pow2(g):
+                raise ValueError(
+                    f"pencil device-grid factors must be powers of two, "
+                    f"got grid={grid} (axes {axes})")
+            if d % g:
+                raise ValueError(
+                    f"distributed pencil shapes need every sharded axis "
+                    f"divisible by D: axis {ax_i} of shape {shape} is {d}, "
+                    f"not divisible by D={g} (grid={grid}, axes {axes})")
+    for ax_i, d in enumerate(shape[:-1]):
+        if d > kplan.MAX_LEAF:
             raise ValueError(
-                f"distributed pencil shapes need every sharded axis "
-                f"divisible by D: axis {ax_i} of shape {shape} is {d}, "
-                f"not divisible by D={num_devices} (axes {axes})")
-    if n0 > kplan.MAX_LEAF:
+                f"pencil axis {ax_i} runs as one column-kernel pass per "
+                f"device, so it caps at MAX_LEAF={kplan.MAX_LEAF}; got "
+                f"{d}")
+    if shape[-1] > MAX_LOCAL_N:
         raise ValueError(
-            f"pencil axis 0 runs as one column-kernel pass per device, so "
-            f"it caps at MAX_LEAF={kplan.MAX_LEAF}; got n0={n0}")
-    if n1 > MAX_LOCAL_N:
-        raise ValueError(
-            f"pencil axis 1 runs the local level-0/1 path, so it caps at "
-            f"MAX_LEAF**2={MAX_LOCAL_N}; got n1={n1}")
+            f"pencil axis {len(shape) - 1} runs the local level-0/1 path, "
+            f"so it caps at MAX_LEAF**2={MAX_LOCAL_N}; got {shape[-1]}")
 
 
 def _normalize_shape(n, shape) -> tuple:
@@ -219,8 +236,14 @@ def resolve(kind: str, n=None, batch_shape=(), placement: str = "auto",
             batch_tile: int | None = None, num_devices: int | None = None,
             axes=None, natural_order: bool = True,
             fuse_twiddle: bool = False, overlap="auto", shape=None,
-            r2c_axis: int = -1, verify: str = "off") -> FftSpec:
-    """Validate + normalize everything into a frozen FftSpec."""
+            r2c_axis: int = -1, verify: str = "off",
+            axis_sizes=None) -> FftSpec:
+    """Validate + normalize everything into a frozen FftSpec.
+
+    ``axis_sizes`` is the per-mesh-axis device count in ``axes`` order
+    (the planner supplies it from the mesh); 3-D pencil volumes need it
+    to form the device grid — 1-D/2-D placements ignore it.
+    """
     from repro.core.resilience.verify import VERIFY_MODES
     if kind not in KINDS:
         raise ValueError(f"unknown kind {kind!r}; expected one of {KINDS}")
@@ -311,15 +334,14 @@ def resolve(kind: str, n=None, batch_shape=(), placement: str = "auto",
                     "packed signal or use placement='segmented' for "
                     "batches of real segments")
             _validate_distributed(shape[0], num_devices, axes)
-        elif ndim == 2:
-            # r2c pencil rides the c2c engine + a one-sided slice (the
-            # packed-real halving doesn't compose with the exchange's
-            # column split); documented in DESIGN.md §9
-            _validate_pencil(shape, num_devices, axes)
         else:
-            raise ValueError(
-                f"placement='distributed' supports 1-D and 2-D shapes, "
-                f"got {shape}; 3-D pencil volumes are a ROADMAP item")
+            # N-D pencil (2-D: one flattened exchange ring; 3-D: one mesh
+            # axis per sharded leading axis — pencil_grid validates that
+            # the mesh structure matches). Lazy import: the strategy
+            # module imports executors, not this spec module.
+            from repro.core.fft.distributed import pencil_grid
+            grid = pencil_grid(shape, num_devices, axis_sizes)
+            _validate_pencil(shape, num_devices, axes, grid)
 
     if placement == "distributed":
         # resolve "auto" and validate explicit chunk counts NOW, so an
@@ -330,8 +352,19 @@ def resolve(kind: str, n=None, batch_shape=(), placement: str = "auto",
             from repro.core.fft.distributed import resolve_overlap
             chunks = resolve_overlap(shape[0], num_devices, overlap)
         else:
-            from repro.core.fft.distributed import resolve_overlap_pencil
-            chunks = resolve_overlap_pencil(shape, num_devices, overlap)
+            from repro.core.fft.distributed import (pencil_r2c_half,
+                                                    resolve_overlap_pencil)
+            # the flop-halved r2c pencil runs its exchanges on the HALF
+            # width (DESIGN.md §14), so chunk validity resolves against
+            # the half shape; the legacy c2c+slice fallback (half=None)
+            # keeps the full shape
+            eff_shape = shape
+            if kind == "r2c":
+                half = pencil_r2c_half(shape, grid, impl)
+                if half is not None:
+                    eff_shape = half
+            chunks = resolve_overlap_pencil(eff_shape, num_devices,
+                                            overlap, grid=grid)
         overlap = "off" if chunks is None else int(chunks)
     else:
         overlap = "off"

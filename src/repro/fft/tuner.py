@@ -1,0 +1,565 @@
+"""Measuring autotuner + persistent wisdom for `repro.fft.plan(tune=True)`.
+
+The planner's analytic cost model ranks strategies by roofline numerators;
+FFTW's wisdom mechanism is the canonical proof that MEASURED plan
+selection beats modeled selection (and arXiv:1409.5757 reports the same
+for blocking/tiling choices on large 1-D transforms). This module closes
+that gap (DESIGN.md §14):
+
+  * `tune(...)` enumerates the real candidate space for a spec — overlap
+    chunk count (which selects the exchange engine: "off" = monolithic
+    all_to_all, an int = the chunked ppermute ring), layout (zero_copy vs
+    copy), batch tile — builds each candidate at a SMALL representative
+    shard shape, times it (min-of-repeats wall clock over the plan's own
+    executable), and returns the winner's knobs.
+  * The decision persists as wisdom: a JSON file keyed on the resolved
+    base spec + mesh fingerprint + backend. A wisdom hit is a pure
+    plan-cache-style lookup — ZERO measurements, ZERO retraces — so
+    fleets and repeat processes skip re-tuning entirely.
+  * Every measurement is compared against the analytic model
+    (`modeled_wall`); when measured and modeled argmins disagree, the
+    report flags it and a `tune_disagreement` resilience event records
+    the case — the running score of where the model is wrong.
+  * `tune_out_of_core(...)` tunes the OOC panel-height knob
+    (`panel_scale`) on the deterministic disk model.
+
+Measurement determinism is injectable for tests and benches: a
+`TuneConfig` carries the rng seed, repeat count, a `timer` (monotonic
+clock) and a `measurer` override ("analytic" ranks candidates purely on
+the cost model; a callable gets `(plan, config)` and returns seconds).
+Candidates that fail to build or execute are discarded (logged), and a
+corrupt/truncated wisdom file degrades to measuring with a logged
+`wisdom_corrupt` event — tuning never turns a plannable spec into an
+error.
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import os
+import threading
+import time
+from dataclasses import dataclass, field, replace
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from repro.core.resilience.events import record_event
+from repro.fft import spec as spec_mod
+
+WISDOM_VERSION = 1
+DEFAULT_WISDOM_PATH = "~/.cache/repro_fft/wisdom.json"
+
+# deterministic CPU-ish model constants (the analytic ranking's rates;
+# absolute values cancel in argmin comparisons, ratios matter)
+PEAK_FLOPS = 5e10     # effective FLOP/s for the leaf GEMMs
+HBM_BPS = 2e10        # memory bandwidth
+ICI_BPS = 5e9         # per-device interconnect bandwidth
+DISK_BPS = 250e6      # ThrottledStore's modeled spindle (testing.DISK_MB_S)
+JOB_OVERHEAD_S = 5e-3 # per-streamed-job dispatch/manifest overhead (OOC)
+COPY_PENALTY = 0.5    # layout="copy" adds this fraction of hbm time
+                      # (the materialized transpose round-trips)
+
+
+@dataclass
+class TuneConfig:
+    """Knobs of the measurement protocol itself (all injectable)."""
+
+    seed: int = 0                 # operand rng seed (determinism)
+    repeats: int = 3              # min-of-N wall-clock measurements
+    timer: object = None          # monotonic clock; None = perf_counter
+    measurer: object = None       # None = real wall clock;
+    #                               "analytic" = rank on modeled_wall;
+    #                               callable(plan, cfg) -> seconds
+    peak_flops: float = PEAK_FLOPS
+    hbm_bps: float = HBM_BPS
+    ici_bps: float = ICI_BPS
+    disk_bps: float = DISK_BPS
+    job_overhead_s: float = JOB_OVERHEAD_S
+
+
+@dataclass
+class TuneReport:
+    """What one tune() call did (wisdom hit or full measurement sweep)."""
+
+    key: str                      # the wisdom key consulted
+    wisdom_hit: bool              # True -> zero measurements performed
+    winner: dict                  # the chosen knobs
+    candidates: list = field(default_factory=list)  # per-candidate rows
+    measurements: int = 0         # candidate timings performed (0 on hit)
+    disagreement: bool = False    # measured argmin != modeled argmin
+    degraded: bool = False        # tuning failed; analytic defaults kept
+    meas_shape: tuple | None = None   # representative shard measured
+    meas_batch: tuple | None = None
+
+
+_STATS_LOCK = threading.Lock()
+_STATS = {"tuned": 0, "wisdom_hits": 0, "measurements": 0,
+          "disagreements": 0, "degraded": 0}
+
+
+def tune_stats() -> dict:
+    """Process-level tuner counters (reported by launch/fft_job.py)."""
+    with _STATS_LOCK:
+        return dict(_STATS)
+
+
+def reset_tune_stats() -> None:
+    with _STATS_LOCK:
+        for k in _STATS:
+            _STATS[k] = 0
+
+
+def _bump(key: str, by: int = 1) -> None:
+    with _STATS_LOCK:
+        _STATS[key] += by
+
+
+# ---------------------------------------------------------------------------
+# wisdom persistence
+
+
+class WisdomStore:
+    """One wisdom file: tolerant load, atomic writes, process-cached.
+
+    A corrupt or truncated file NEVER raises — it logs a `wisdom_corrupt`
+    event and degrades to an empty store (the caller re-measures and the
+    next record overwrites the bad file). Writes go through a temp file +
+    os.replace so a crash mid-write can't truncate existing wisdom.
+    """
+
+    _REGISTRY: dict = {}
+    _REGISTRY_LOCK = threading.Lock()
+
+    def __init__(self, path):
+        self.path = Path(path).expanduser()
+        self._lock = threading.Lock()
+        self._entries: dict = {}
+        self._load()
+
+    @classmethod
+    def get(cls, path=None) -> "WisdomStore":
+        p = str(Path(path or DEFAULT_WISDOM_PATH).expanduser())
+        with cls._REGISTRY_LOCK:
+            store = cls._REGISTRY.get(p)
+            if store is None:
+                store = cls._REGISTRY[p] = cls(p)
+            return store
+
+    def _load(self) -> None:
+        try:
+            raw = self.path.read_text()
+        except FileNotFoundError:
+            return
+        except OSError as e:
+            record_event("wisdom_corrupt", path=str(self.path),
+                         error=repr(e))
+            return
+        try:
+            doc = json.loads(raw)
+            if not isinstance(doc, dict):
+                raise ValueError("wisdom document is not an object")
+            if doc.get("version") != WISDOM_VERSION:
+                raise ValueError(
+                    f"wisdom version {doc.get('version')!r} != "
+                    f"{WISDOM_VERSION}")
+            entries = doc.get("entries")
+            if not isinstance(entries, dict):
+                raise ValueError("wisdom entries missing or not an object")
+            self._entries = entries
+        except (ValueError, KeyError, TypeError) as e:
+            record_event("wisdom_corrupt", path=str(self.path),
+                         error=repr(e))
+            self._entries = {}
+
+    def lookup(self, key: str):
+        with self._lock:
+            entry = self._entries.get(key)
+            return dict(entry) if isinstance(entry, dict) else None
+
+    def record(self, key: str, entry: dict) -> None:
+        with self._lock:
+            self._entries[key] = entry
+            try:
+                self.path.parent.mkdir(parents=True, exist_ok=True)
+                tmp = self.path.with_name(self.path.name + ".tmp")
+                tmp.write_text(json.dumps(
+                    {"version": WISDOM_VERSION, "entries": self._entries},
+                    indent=1, sort_keys=True))
+                os.replace(tmp, self.path)
+            except OSError as e:
+                # wisdom is an accelerator, not a correctness surface:
+                # an unwritable cache dir degrades to per-process tuning
+                record_event("wisdom_write_failed", path=str(self.path),
+                             error=repr(e))
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._entries)
+
+
+def mesh_fingerprint(mesh) -> str:
+    """Stable identity of the hardware a tuning decision was measured on.
+
+    Device count + per-axis name:size structure + platform/device kind:
+    stale wisdom from a DIFFERENT mesh shape or backend keys differently
+    and is simply never consulted (the mismatch test relies on this).
+    """
+    if mesh is None:
+        return "mesh=none"
+    axes = ",".join(f"{k}={v}" for k, v in mesh.shape.items())
+    devs = list(mesh.devices.flat)
+    plats = sorted({getattr(d, "platform", "?") for d in devs})
+    kinds = sorted({getattr(d, "device_kind", "?") for d in devs})
+    return (f"devices={mesh.devices.size};axes={axes};"
+            f"platform={'+'.join(plats)};kind={'+'.join(kinds)}")
+
+
+def wisdom_key(base_spec, mesh) -> str:
+    """version | backend | mesh fingerprint | tunable-neutral spec.
+
+    The tunable knobs (layout, batch_tile, overlap) are normalized OUT of
+    the key — they are the wisdom's VALUE, not its identity."""
+    neutral = replace(base_spec, layout="zero_copy", batch_tile=None,
+                      overlap="off")
+    return (f"v{WISDOM_VERSION}|backend={jax.default_backend()}|"
+            f"{mesh_fingerprint(mesh)}|{neutral!r}")
+
+
+# ---------------------------------------------------------------------------
+# the analytic side of the comparison
+
+
+def modeled_wall(plan, cfg: TuneConfig) -> float:
+    """The analytic model's wall estimate for one execute of ``plan``:
+    roofline numerators over the config's rates, plus the exposed (non-
+    overlappable) collective bytes and the copy-layout transpose
+    penalty. Used to rank the same candidates the measurements rank —
+    disagreement between the two argmins is the tuner's headline
+    diagnostic."""
+    hbm_t = plan.hbm_bytes / cfg.hbm_bps
+    wall = (plan.flops / cfg.peak_flops + hbm_t
+            + plan.exposed_collective_bytes / cfg.ici_bps)
+    if plan.spec.layout == "copy":
+        wall += COPY_PENALTY * hbm_t
+    return wall
+
+
+def modeled_ooc_wall(factors, cfg: TuneConfig) -> float:
+    """Deterministic disk-model wall for an OOC factorization: streamed
+    IO at the spindle rate + per-job overhead + the transform flops."""
+    jobs = factors.pass1_jobs + factors.pass2_jobs
+    flops = 5.0 * factors.n * math.log2(max(factors.n, 2))
+    return (factors.io_bytes / cfg.disk_bps
+            + jobs * cfg.job_overhead_s
+            + flops / cfg.peak_flops)
+
+
+# ---------------------------------------------------------------------------
+# candidate space + representative measurement shapes
+
+
+def _pow2_min(a: int, b: int) -> int:
+    return min(int(a), int(b))
+
+
+def _shrink(base, num_devices, grid):
+    """Representative measurement (shape, batch_shape) for a base spec:
+    small enough to time in milliseconds, same validity class (placement,
+    divisibility, pow2-ness) as the full spec."""
+    if base.placement == "distributed":
+        if base.ndim == 1:
+            d = num_devices
+            n_meas = _pow2_min(base.shape[0], max(d * d, 1 << 12))
+            return (n_meas,), ()
+        gmax = max(grid)
+        dims = tuple(_pow2_min(dim, max(64, 2 * gmax))
+                     for dim in base.shape)
+        return dims, ()
+    dims = tuple(_pow2_min(dim, 1024 if i == base.ndim - 1 else 64)
+                 for i, dim in enumerate(base.shape))
+    rows = base.rows
+    if base.placement == "segmented":
+        b = _pow2_min(rows, 2 * (num_devices or 1))
+    else:
+        b = min(rows, 16)
+    batch = (b,) if base.batch_shape else ()
+    return dims, batch
+
+
+def _spec_ok(kwargs) -> bool:
+    try:
+        spec_mod.resolve(**kwargs)
+        return True
+    except (ValueError, NotImplementedError):
+        return False
+
+
+def _candidates(base, num_devices, grid, meas_shape, meas_batch):
+    """Deterministically-ordered knob combinations. The base spec's own
+    (already-resolved) knobs are candidate 0, so the measured winner can
+    never rank behind the analytic default under the same measurer."""
+    layouts = (["zero_copy", "copy"] if base.impl == "matfft"
+               else ["zero_copy"])
+    overlaps: list = ["off"]
+    tiles: list = [None]
+    if base.placement == "distributed":
+        overlaps += [2, 4, 8]
+        if base.ndim > 1:
+            # local contiguous-rows count at the MEASUREMENT shape; both
+            # pow2, meas <= full, so these divide the full shard too
+            rows_local = math.prod(m // g
+                                   for m, g in zip(meas_shape, grid))
+            tiles += [t for t in (rows_local, rows_local // 2) if t >= 1]
+    else:
+        rows = math.prod(meas_batch) if meas_batch else 1
+        if rows > 1:
+            tiles += [min(rows, 8)]
+    combos = [{"overlap": base.overlap, "layout": base.layout,
+               "batch_tile": base.batch_tile}]
+    for ov in overlaps:
+        for ly in layouts:
+            for bt in dict.fromkeys(tiles):
+                combos.append({"overlap": ov, "layout": ly,
+                               "batch_tile": bt})
+    seen, out = set(), []
+    for c in combos:
+        k = (c["overlap"], c["layout"], c["batch_tile"])
+        if k not in seen:
+            seen.add(k)
+            out.append(c)
+    return out
+
+
+def _measure_exec(plan, cfg: TuneConfig) -> float:
+    """Default measurer: seeded operands, warm once (compile), then
+    min-of-repeats wall clock around a fully-realized execute."""
+    timer = cfg.timer or time.perf_counter
+    rng = np.random.default_rng(cfg.seed)
+    shape = plan.spec.operand_shape
+
+    def _mk():
+        return jax.numpy.asarray(
+            rng.standard_normal(shape).astype(np.float32))
+
+    if plan.kind == "r2c":
+        ops = (_mk(),)
+        run = lambda: plan.execute_real(*ops)  # noqa: E731
+    else:
+        ops = (_mk(), _mk())
+        run = lambda: plan.execute(*ops)  # noqa: E731
+    out = run()
+    jax.block_until_ready(out)  # warm: compile + first dispatch
+    best = math.inf
+    for _ in range(max(cfg.repeats, 1)):
+        t0 = timer()
+        jax.block_until_ready(run())
+        best = min(best, timer() - t0)
+    return best
+
+
+def _measure(plan, cfg: TuneConfig) -> float:
+    if cfg.measurer == "analytic":
+        return modeled_wall(plan, cfg)
+    if callable(cfg.measurer):
+        return float(cfg.measurer(plan, cfg))
+    return _measure_exec(plan, cfg)
+
+
+# ---------------------------------------------------------------------------
+# the entry points
+
+
+def tune(*, kind, n=None, shape=None, batch_shape=(), mesh=None, axes=None,
+         num_devices=None, axis_sizes=None, placement="auto",
+         layout="zero_copy", impl="matfft", precision="f32",
+         interpret=None, batch_tile=None, natural_order=True,
+         fuse_twiddle=False, overlap="auto", r2c_axis=-1, verify="off",
+         wisdom_path=None, config: TuneConfig | None = None):
+    """Pick (layout, batch_tile, overlap) for a spec by measurement.
+
+    Returns ``(knobs, TuneReport)``. On a wisdom hit the knobs come
+    straight from disk (zero measurements). On a miss every valid
+    candidate is built at the representative shard shape, measured, and
+    the winner is persisted. Degrades to ``({}, report)`` — analytic
+    defaults — when the base spec cannot resolve or no candidate
+    measures; the caller's own plan() then surfaces the real error.
+    """
+    cfg = config or TuneConfig()
+    base_kwargs = dict(kind=kind, n=n, shape=shape, batch_shape=batch_shape,
+                       placement=placement, layout=layout, impl=impl,
+                       precision=precision, interpret=interpret,
+                       batch_tile=batch_tile, num_devices=num_devices,
+                       axes=axes, natural_order=natural_order,
+                       fuse_twiddle=fuse_twiddle, overlap=overlap,
+                       r2c_axis=r2c_axis, verify=verify,
+                       axis_sizes=axis_sizes)
+    _bump("tuned")
+    try:
+        base = spec_mod.resolve(**base_kwargs)
+    except (ValueError, NotImplementedError) as e:
+        _bump("degraded")
+        record_event("tune_degraded", reason="resolve_failed",
+                     error=repr(e))
+        return {}, TuneReport(key="", wisdom_hit=False, winner={},
+                              degraded=True)
+    key = wisdom_key(base, mesh)
+    store = WisdomStore.get(wisdom_path)
+
+    entry = store.lookup(key)
+    if entry is not None:
+        knobs = dict(entry.get("knobs") or {})
+        # sanity: stale-but-key-colliding knobs must still resolve; if
+        # not, fall through to a fresh measurement sweep
+        if _spec_ok({**base_kwargs, **knobs}):
+            _bump("wisdom_hits")
+            return knobs, TuneReport(
+                key=key, wisdom_hit=True, winner=knobs,
+                candidates=entry.get("candidates", []),
+                measurements=0,
+                disagreement=bool(entry.get("disagreement", False)))
+        record_event("wisdom_stale", key=key, knobs=knobs)
+
+    # ---- measurement sweep -------------------------------------------
+    grid = None
+    if base.placement == "distributed" and base.ndim > 1:
+        from repro.core.fft.distributed import pencil_grid
+        grid = pencil_grid(base.shape, num_devices, axis_sizes)
+    meas_shape, meas_batch = _shrink(base, num_devices, grid)
+    meas_kwargs = {**base_kwargs, "n": None, "shape": meas_shape,
+                   "batch_shape": meas_batch,
+                   "placement": base.placement}
+
+    from repro.fft import planner
+    results = []
+    for knobs in _candidates(base, num_devices, grid, meas_shape,
+                             meas_batch):
+        full_kw = {**base_kwargs, **knobs}
+        meas_kw = {**meas_kwargs, **knobs}
+        if not (_spec_ok(full_kw) and _spec_ok(meas_kw)):
+            continue
+        try:
+            p = planner.plan(
+                kind=kind, shape=meas_shape, batch_shape=meas_batch,
+                mesh=mesh, placement=base.placement,
+                layout=knobs["layout"], impl=impl, precision=precision,
+                interpret=interpret, batch_tile=knobs["batch_tile"],
+                axes=axes, natural_order=natural_order,
+                fuse_twiddle=fuse_twiddle, overlap=knobs["overlap"],
+                r2c_axis=r2c_axis, verify=verify)
+            measured = float(_measure(p, cfg))
+            modeled = float(modeled_wall(p, cfg))
+        except Exception as e:  # noqa: BLE001 — a candidate, not the plan
+            record_event("tune_candidate_failed", key=key, knobs=knobs,
+                         error=repr(e))
+            continue
+        _bump("measurements")
+        results.append({"knobs": knobs, "measured_s": measured,
+                        "modeled_s": modeled})
+
+    if not results:
+        _bump("degraded")
+        record_event("tune_degraded", reason="no_candidate_measured",
+                     key=key)
+        return {}, TuneReport(key=key, wisdom_hit=False, winner={},
+                              degraded=True, meas_shape=meas_shape,
+                              meas_batch=meas_batch)
+
+    meas_i = min(range(len(results)),
+                 key=lambda i: (results[i]["measured_s"], i))
+    model_i = min(range(len(results)),
+                  key=lambda i: (results[i]["modeled_s"], i))
+    disagreement = (results[meas_i]["knobs"] != results[model_i]["knobs"])
+    if disagreement:
+        _bump("disagreements")
+        record_event(
+            "tune_disagreement", key=key,
+            measured_winner=results[meas_i]["knobs"],
+            modeled_winner=results[model_i]["knobs"],
+            measured_s=results[meas_i]["measured_s"],
+            modeled_s=results[model_i]["modeled_s"])
+    winner = dict(results[meas_i]["knobs"])
+    store.record(key, {"knobs": winner,
+                       "measured_s": results[meas_i]["measured_s"],
+                       "modeled_s": results[meas_i]["modeled_s"],
+                       "candidates": results,
+                       "disagreement": disagreement,
+                       "meas_shape": list(meas_shape),
+                       "meas_batch": list(meas_batch)})
+    return winner, TuneReport(
+        key=key, wisdom_hit=False, winner=winner, candidates=results,
+        measurements=len(results), disagreement=disagreement,
+        meas_shape=meas_shape, meas_batch=meas_batch)
+
+
+OOC_PANEL_SCALES = (1, 2, 4)
+
+
+def tune_out_of_core(n: int, budget_bytes: int, *, impl: str = "ref",
+                     block_bytes: int | None = None, wisdom_path=None,
+                     config: TuneConfig | None = None):
+    """Tune the OOC panel-height knob: try each valid ``panel_scale``
+    on the deterministic disk model (or an injected measurer taking the
+    OocPlan factorization) and persist the winner as wisdom.
+
+    Returns ``(panel_scale, TuneReport)``; degrades to ``(1, report)``.
+    """
+    from repro.core.fft.outofcore import factor_out_of_core
+    cfg = config or TuneConfig()
+    key = (f"v{WISDOM_VERSION}|ooc|backend={jax.default_backend()}|"
+           f"n={int(n)}|budget={int(budget_bytes)}|impl={impl}|"
+           f"block={block_bytes}")
+    store = WisdomStore.get(wisdom_path)
+    _bump("tuned")
+    entry = store.lookup(key)
+    if entry is not None:
+        knobs = dict(entry.get("knobs") or {})
+        scale = int(knobs.get("panel_scale", 1))
+        _bump("wisdom_hits")
+        return scale, TuneReport(
+            key=key, wisdom_hit=True, winner=knobs,
+            candidates=entry.get("candidates", []), measurements=0,
+            disagreement=bool(entry.get("disagreement", False)))
+
+    results = []
+    for scale in OOC_PANEL_SCALES:
+        try:
+            factors = factor_out_of_core(n, budget_bytes,
+                                         block_bytes=block_bytes,
+                                         panel_scale=scale)
+        except ValueError:
+            continue
+        if callable(cfg.measurer):
+            measured = float(cfg.measurer(factors, cfg))
+        else:
+            measured = modeled_ooc_wall(factors, cfg)
+        modeled = modeled_ooc_wall(factors, cfg)
+        _bump("measurements")
+        results.append({"knobs": {"panel_scale": scale},
+                        "measured_s": measured, "modeled_s": modeled})
+    if not results:
+        _bump("degraded")
+        record_event("tune_degraded", reason="no_ooc_candidate", key=key)
+        return 1, TuneReport(key=key, wisdom_hit=False, winner={},
+                             degraded=True)
+    meas_i = min(range(len(results)),
+                 key=lambda i: (results[i]["measured_s"], i))
+    model_i = min(range(len(results)),
+                  key=lambda i: (results[i]["modeled_s"], i))
+    disagreement = meas_i != model_i
+    if disagreement:
+        _bump("disagreements")
+        record_event("tune_disagreement", key=key,
+                     measured_winner=results[meas_i]["knobs"],
+                     modeled_winner=results[model_i]["knobs"])
+    winner = dict(results[meas_i]["knobs"])
+    store.record(key, {"knobs": winner,
+                       "measured_s": results[meas_i]["measured_s"],
+                       "modeled_s": results[meas_i]["modeled_s"],
+                       "candidates": results,
+                       "disagreement": disagreement})
+    return int(winner["panel_scale"]), TuneReport(
+        key=key, wisdom_hit=False, winner=winner, candidates=results,
+        measurements=len(results), disagreement=disagreement)

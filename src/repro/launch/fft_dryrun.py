@@ -89,6 +89,17 @@ def main(argv=None):
                     help="global FFT length (distributed variants)")
     ap.add_argument("--n2d", type=int, nargs=2, default=[1 << 14, 1 << 14],
                     help="global image shape (pencil2d variant)")
+    ap.add_argument("--n3d", type=int, nargs=3,
+                    default=[1 << 10, 1 << 10, 1 << 8],
+                    help="global volume shape (pencil3d variant; axes 0 "
+                         "and 1 shard over the (data, model) mesh axes)")
+    ap.add_argument("--tune", action="store_true",
+                    help="run the measuring autotuner (analytic measurer "
+                         "— nothing executes here) on the pencil2d spec "
+                         "and report the winner + wisdom stats")
+    ap.add_argument("--wisdom-path", default=None,
+                    help="wisdom file for --tune (default "
+                         "~/.cache/repro_fft/wisdom.json)")
     ap.add_argument("--seg-batch", type=int, default=1 << 15)
     ap.add_argument("--seg-len", type=int, default=4096)
     ap.add_argument("--mesh", default="single_pod",
@@ -133,6 +144,42 @@ def main(argv=None):
                             placement="distributed", axes=axes,
                             overlap="off")
     recs.append(measure(p_pencil, (img, img), "pencil2d"))
+
+    if args.tune:
+        # measured plan selection for the pencil spec — the analytic
+        # measurer ranks candidates on the cost model without executing
+        # anything (this is a dryrun); winners persist as wisdom so a
+        # real launch with --tune re-plans with zero measurements
+        from repro.fft import tuner
+        cfg = tuner.TuneConfig(measurer="analytic")
+        knobs, trep = tuner.tune(
+            kind="c2c", shape=shape2d, mesh=mesh, axes=axes,
+            num_devices=math.prod(mesh.shape[a] for a in axes),
+            axis_sizes=tuple(mesh.shape[a] for a in axes),
+            placement="distributed", wisdom_path=args.wisdom_path,
+            config=cfg)
+        recs.append({
+            "name": "pencil2d_tuned", "analytic_only": True,
+            "winner": knobs, "wisdom_hit": trep.wisdom_hit,
+            "candidates": len(trep.candidates),
+            "disagreement": trep.disagreement,
+            "tune_stats": tuner.tune_stats(),
+        })
+
+    # 3-D pencil: one mesh axis per sharded volume axis, ndim-1 == 2
+    # re-pencil exchange legs (arXiv:2202.12756) — the per-leg
+    # collective split is the record's headline
+    shape3d = tuple(args.n3d)
+    axes3 = axes[-2:]
+    vol = sds(shape3d, jnp.float32)
+    p_pencil3 = fft_api.plan(kind="c2c", shape=shape3d, mesh=mesh,
+                             placement="distributed", axes=axes3,
+                             overlap="off")
+    rec3 = measure(p_pencil3, (vol, vol), "pencil3d")
+    rec3["n_exchanges"] = p_pencil3.dist.n_exchanges
+    rec3["plan_per_leg_collective_bytes"] = list(
+        p_pencil3.per_leg_collective_bytes)
+    recs.append(rec3)
 
     # predicted overlap win, analytic only (module docstring): plan the
     # chunked pipeline — never lower it — and report what its cost model

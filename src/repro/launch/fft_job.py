@@ -62,7 +62,8 @@ class _TimedStore:
         self._add("write", t0)
 
 
-def serial_map_fn(fft_len: int, impl: str, add, verify: str = "off"):
+def serial_map_fn(fft_len: int, impl: str, add, verify: str = "off",
+                  tune: bool = False, wisdom_path=None):
     """The synchronous per-block map task, with per-stage clocks.
 
     Stage names match the stream executor's so the two paths are
@@ -80,7 +81,8 @@ def serial_map_fn(fft_len: int, impl: str, add, verify: str = "off"):
         # jit'd callable is built once, the cufftPlanMany amortization
         p = fft_api.plan(kind="c2c", n=fft_len,
                          batch_shape=re.shape[:-1], impl=impl,
-                         verify=verify)
+                         verify=verify, tune=tune,
+                         wisdom_path=wisdom_path)
         yr, yi = p.execute(re, im)
         yr.block_until_ready()  # the serial path's per-block sync
         t = add("compute", t)
@@ -110,7 +112,8 @@ def parseval_verify_fn(fft_len: int):
 
 
 def run_job(store: BlockStore, out_dir, *, fft_len: int, impl: str,
-            cfg: JobConfig, pipelined: bool, verify: str = "off"):
+            cfg: JobConfig, pipelined: bool, verify: str = "off",
+            tune: bool = False, wisdom_path=None):
     """Run the FFT job serial or pipelined; returns (job, stats, stage_s)."""
     if pipelined:
         job = MapOnlyJob(store, out_dir, config=cfg, pipelined=True,
@@ -131,7 +134,9 @@ def run_job(store: BlockStore, out_dir, *, fft_len: int, impl: str,
         from dataclasses import replace as _replace
         cfg = _replace(cfg, verify_fn=parseval_verify_fn(fft_len))
     job = MapOnlyJob(_TimedStore(store, add), out_dir,
-                     serial_map_fn(fft_len, impl, add, verify), config=cfg)
+                     serial_map_fn(fft_len, impl, add, verify,
+                                   tune=tune, wisdom_path=wisdom_path),
+                     config=cfg)
     stats = job.run()
     return job, stats, stage_s
 
@@ -174,7 +179,8 @@ def run_out_of_core(args) -> dict:
     plan = fft_api.plan(kind="c2c", n=n, placement="out_of_core",
                         store=store, work_dir=work / "ooc", impl=args.impl,
                         budget_bytes=budget, job_config=cfg,
-                        verify=args.verify)
+                        verify=args.verify, tune=args.tune,
+                        wisdom_path=args.wisdom_path)
     t0 = time.monotonic()
     stats = plan.execute()
     t_job = time.monotonic() - t0
@@ -200,7 +206,17 @@ def run_out_of_core(args) -> dict:
         "store": store.stats.as_dict(),
         "faults": injector.summary() if injector is not None else None,
         "plan_cache": fft_api.cache_info(),
+        "tuner": _tuner_stats(args.tune),
     }
+
+
+def _tuner_stats(tune: bool):
+    """Wisdom/measurement counters for the report; None when --tune off
+    (the tuner module is never imported on the default path)."""
+    if not tune:
+        return None
+    from repro.fft import tuner
+    return tuner.tune_stats()
 
 
 def main(argv=None):
@@ -250,6 +266,17 @@ def main(argv=None):
                     help="out-of-core transform size, log2 of points")
     ap.add_argument("--budget-mb", type=int, default=16,
                     help="out-of-core working-set budget in MiB")
+    ap.add_argument("--tune", action="store_true",
+                    help="measuring autotuner (DESIGN.md §14): plan-time "
+                         "candidate sweeps pick layout/batch-tile/"
+                         "exchange-engine (and the out-of-core panel "
+                         "height) by measurement; winners persist as "
+                         "wisdom so later runs re-plan with zero "
+                         "measurements — the report carries the "
+                         "tuned/wisdom-hit/measurement counters")
+    ap.add_argument("--wisdom-path", default=None,
+                    help="wisdom file for --tune (default "
+                         "~/.cache/repro_fft/wisdom.json)")
     args = ap.parse_args(argv)
 
     if args.out_of_core:
@@ -286,7 +313,8 @@ def main(argv=None):
     job, stats, stage_s = run_job(store, work / "out", fft_len=args.fft_len,
                                   impl=args.impl, cfg=cfg,
                                   pipelined=args.pipelined,
-                                  verify=args.verify)
+                                  verify=args.verify, tune=args.tune,
+                                  wisdom_path=args.wisdom_path)
     t_job = time.monotonic() - t0
     t0 = time.monotonic()
     nbytes = job.merge(work / "merged.bin")
@@ -339,6 +367,7 @@ def main(argv=None):
         "predicted_s_8_workers": round(model.predict(n, 1, 8), 3),
         "predicted_s_64_workers": round(model.predict(n, 8, 8), 3),
         "plan_cache": fft_api.cache_info(),
+        "tuner": _tuner_stats(args.tune),
     }, indent=1))
 
 

@@ -83,6 +83,17 @@ if [[ $# -eq 0 && -z "${REPRO_SKIP_VERIFY_BENCH:-}" ]]; then
   python benchmarks/bench_verify.py --quick
 fi
 
+# tune gate: the measuring autotuner must pick knobs no slower than the
+# analytic default on the deterministic event-sim/disk models, a second
+# process must re-plan from shared wisdom with ZERO measurements and the
+# identical winner, and the 3-D pencil must stay bitwise-equal to the
+# local fftn oracle under both exchange engines with per-leg
+# collective-byte accounting intact (BENCH_tune.json; exits nonzero on
+# regression). The marked tune tests also run in the sweep below.
+if [[ $# -eq 0 && -z "${REPRO_SKIP_TUNE_BENCH:-}" ]]; then
+  python benchmarks/bench_tune.py --quick
+fi
+
 # --durations: the bench-gated suite keeps growing; keep the slowest
 # tests visible in CI logs so the ~45 min job budget (ci.yml
 # timeout-minutes) is spent knowingly, not discovered on timeout.

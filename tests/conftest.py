@@ -87,6 +87,11 @@ def pytest_configure(config):
         "verify: ABFT silent-corruption defense tests (invariant checks, "
         "corrupt fault rules, quarantine-and-recompute; the storm gate "
         "is bench_verify.py)")
+    config.addinivalue_line(
+        "markers",
+        "tune: measuring-autotuner and persistent-wisdom tests "
+        "(determinism, wisdom round-trips, corrupt-file degradation; "
+        "the measured-vs-analytic gate is bench_tune.py)")
 
 
 @pytest.fixture

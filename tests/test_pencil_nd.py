@@ -1,0 +1,155 @@
+"""3-D pencil decomposition + true r2c pencil (DESIGN.md §14).
+
+The N-D generalization's contract, tested on the 8-device CPU mesh:
+  * a 3-D volume on a 2-axis mesh runs ``ndim-1 == 2`` re-pencil
+    exchange legs, bitwise-equal to the LOCAL fftn plan (same kernel
+    tiles) under both exchange engines (monolithic all_to_all and the
+    chunked ppermute ring);
+  * per-leg collective-byte accounting: ``per_leg_collective_bytes`` has
+    one entry per leg and sums to ``collective_bytes`` (same for the
+    exposed variants up to chunk integer division);
+  * the r2c pencil streams the PACKED half-width volume through every
+    leg — flops and exchange bytes halved vs the c2c pencil — and stays
+    bitwise-equal to the local rfftn plan;
+  * spec errors: a 3-D distributed volume without a mesh, with the
+    wrong mesh-axis count, or with an axis the grid can't divide are
+    plan-time ValueErrors, not shard_map crashes.
+"""
+
+import numpy as np
+import jax
+import pytest
+
+import repro.fft as fft_api
+from repro import compat
+from repro.fft import spec as spec_mod
+
+BT = 2  # matched kernel batch tile: pencil == local bitwise requires it
+
+
+def _need(n):
+    if jax.device_count() < n:
+        pytest.skip(f"needs >= {n} devices, have {jax.device_count()}")
+
+
+@pytest.fixture(scope="module")
+def mesh2d():
+    if jax.device_count() < 8:
+        pytest.skip("needs >= 8 devices for the (4, 2) mesh")
+    return compat.make_mesh((4, 2), ("data", "model"))
+
+
+@pytest.fixture(autouse=True)
+def _clean():
+    fft_api.clear_plan_cache()
+    yield
+    fft_api.clear_plan_cache()
+
+
+def _operands(shape, seed=0, n=2):
+    rng = np.random.default_rng(seed)
+    return tuple(rng.standard_normal(shape).astype(np.float32)
+                 for _ in range(n))
+
+
+SHAPE3 = (16, 32, 64)
+
+
+class TestPencil3D:
+    @pytest.mark.parametrize("overlap", ["off", 2])
+    def test_bitwise_vs_local_fftn(self, mesh2d, overlap):
+        xr, xi = _operands(SHAPE3)
+        local = fft_api.plan(kind="c2c", shape=SHAPE3, batch_tile=BT,
+                             placement="local")
+        want = local.execute(xr, xi)
+        p = fft_api.plan(kind="c2c", shape=SHAPE3, mesh=mesh2d,
+                         placement="distributed", batch_tile=BT,
+                         overlap=overlap)
+        got = p.execute(xr, xi)
+        for g, w in zip(got, want):
+            assert np.asarray(g).tobytes() == np.asarray(w).tobytes()
+
+    def test_two_exchange_legs_and_per_leg_bytes(self, mesh2d):
+        p = fft_api.plan(kind="c2c", shape=SHAPE3, mesh=mesh2d,
+                         placement="distributed", overlap="off")
+        assert p.dist.n_exchanges == len(SHAPE3) - 1 == 2
+        legs = p.per_leg_collective_bytes
+        assert len(legs) == 2
+        assert sum(legs) == p.collective_bytes
+        # chunked engine: exposed bytes shrink per leg
+        pc = fft_api.plan(kind="c2c", shape=SHAPE3, mesh=mesh2d,
+                          placement="distributed", overlap=2)
+        exp = pc.per_leg_exposed_collective_bytes
+        assert len(exp) == 2
+        assert all(e <= b // 2 for e, b in zip(exp, legs))
+        assert sum(exp) == pc.exposed_collective_bytes
+
+    def test_grid_follows_mesh_axes(self, mesh2d):
+        p = fft_api.plan(kind="c2c", shape=SHAPE3, mesh=mesh2d,
+                         placement="distributed")
+        assert p.dist.grid == (4, 2)
+        assert p.dist.d == 8
+
+
+class TestR2cPencil:
+    @pytest.mark.parametrize("overlap", ["off", 2])
+    def test_3d_bitwise_vs_local_rfftn(self, mesh2d, overlap):
+        (x,) = _operands(SHAPE3, n=1)
+        local = fft_api.plan(kind="r2c", shape=SHAPE3, batch_tile=BT,
+                             placement="local")
+        want = local.execute_real(x)
+        p = fft_api.plan(kind="r2c", shape=SHAPE3, mesh=mesh2d,
+                         placement="distributed", batch_tile=BT,
+                         overlap=overlap)
+        assert p._fast_r2c_pencil
+        got = p.execute_real(x)
+        for g, w in zip(got, want):
+            assert np.asarray(g).tobytes() == np.asarray(w).tobytes()
+
+    @pytest.mark.parametrize("overlap", ["off", 2])
+    def test_2d_bitwise_vs_local_rfftn(self, overlap):
+        _need(2)
+        d = jax.device_count()
+        mesh = compat.make_mesh((d,), ("data",))
+        shape = (8 * d, 256)
+        (x,) = _operands(shape, n=1)
+        local = fft_api.plan(kind="r2c", shape=shape, batch_tile=BT,
+                             placement="local")
+        want = local.execute_real(x)
+        p = fft_api.plan(kind="r2c", shape=shape, mesh=mesh,
+                         placement="distributed", batch_tile=BT,
+                         overlap=overlap)
+        assert p._fast_r2c_pencil
+        got = p.execute_real(x)
+        for g, w in zip(got, want):
+            assert np.asarray(g).tobytes() == np.asarray(w).tobytes()
+
+    def test_flops_and_bytes_halved(self, mesh2d):
+        c2c = fft_api.plan(kind="c2c", shape=SHAPE3, mesh=mesh2d,
+                           placement="distributed")
+        r2c = fft_api.plan(kind="r2c", shape=SHAPE3, mesh=mesh2d,
+                           placement="distributed")
+        assert r2c._fast_r2c_pencil
+        # the packed pencil moves HALF the exchange bytes of the c2c run
+        assert r2c.collective_bytes == c2c.collective_bytes // 2
+        assert r2c.flops < 0.75 * c2c.flops
+        assert r2c.gemm_macs < 0.75 * c2c.gemm_macs
+
+
+class TestSpecErrors:
+    def test_3d_distributed_needs_mesh_axes(self):
+        with pytest.raises(ValueError, match="mesh"):
+            spec_mod.resolve(kind="c2c", shape=SHAPE3,
+                             placement="distributed", num_devices=8)
+
+    def test_3d_wrong_axis_count(self, mesh2d):
+        # a 3-D volume on a 1-axis slice of the mesh: needs exactly 2
+        with pytest.raises(ValueError, match="mesh axes"):
+            fft_api.plan(kind="c2c", shape=SHAPE3, mesh=mesh2d,
+                         axes=("data",), placement="distributed")
+
+    def test_3d_indivisible_axis(self, mesh2d):
+        # grid[0]=4 must divide BOTH axis 0 (8: ok) and axis 1 (2: not)
+        with pytest.raises(ValueError, match="axis 1"):
+            fft_api.plan(kind="c2c", shape=(8, 2, 64), mesh=mesh2d,
+                         placement="distributed")

@@ -1,0 +1,276 @@
+"""Measuring autotuner + persistent wisdom (DESIGN.md §14).
+
+Covers the tentpole claims that aren't the bench gate's job:
+  * determinism — the same seed and the same injected timer pick the
+    same winner, twice, from a cold store;
+  * a wisdom hit is a pure lookup: zero measurements, stored knobs
+    returned verbatim, and `fft.cache_info()["wisdom_hits"]` advances
+    while a hit that still BUILDS a plan counts as a plan-cache miss;
+  * corrupt/truncated wisdom degrades to measuring with a logged
+    `wisdom_corrupt` event — never an exception;
+  * wisdom is keyed on the mesh fingerprint: a different mesh shape
+    re-measures instead of consulting stale knobs;
+  * tuning a spec that cannot resolve degrades to analytic defaults so
+    plan() surfaces the real error itself.
+"""
+
+import json
+
+import numpy as np
+import jax
+import pytest
+
+import repro.fft as fft_api
+from repro import compat
+import importlib
+
+events = importlib.import_module("repro.core.resilience.events")
+from repro.fft import tuner
+
+pytestmark = pytest.mark.tune
+
+
+@pytest.fixture(autouse=True)
+def _clean():
+    fft_api.clear_plan_cache()
+    tuner.reset_tune_stats()
+    events.clear_events()
+    yield
+    fft_api.clear_plan_cache()
+
+
+def _wisdom(tmp_path, name="wisdom.json"):
+    return str(tmp_path / name)
+
+
+def _fake_measurer():
+    """Deterministic stand-in for the wall clock: a pure function of the
+    candidate's knobs, so two sweeps agree exactly."""
+    def measure(plan, cfg):
+        s = plan.spec
+        base = 1e-3 + plan.hbm_bytes * 1e-12
+        if s.layout == "copy":
+            base *= 1.5
+        if s.overlap != "off":
+            base *= 0.9 / (1 + 0.01 * int(s.overlap))
+        if s.batch_tile is not None:
+            base *= 1.01
+        return base
+    return measure
+
+
+KW = dict(kind="c2c", shape=(64, 256), batch_shape=(8,))
+
+
+class TestDeterminism:
+    def test_same_seed_same_timer_same_winner(self, tmp_path):
+        cfg = tuner.TuneConfig(seed=7, measurer=_fake_measurer())
+        k1, r1 = tuner.tune(**KW, wisdom_path=_wisdom(tmp_path, "a.json"),
+                            config=cfg)
+        k2, r2 = tuner.tune(**KW, wisdom_path=_wisdom(tmp_path, "b.json"),
+                            config=cfg)
+        assert not r1.wisdom_hit and not r2.wisdom_hit
+        assert r1.measurements == r2.measurements > 0
+        assert k1 == k2
+        assert ([c["knobs"] for c in r1.candidates]
+                == [c["knobs"] for c in r2.candidates])
+
+    def test_analytic_measurer_is_deterministic(self, tmp_path):
+        cfg = tuner.TuneConfig(measurer="analytic")
+        k1, _ = tuner.tune(**KW, wisdom_path=_wisdom(tmp_path, "a.json"),
+                           config=cfg)
+        k2, _ = tuner.tune(**KW, wisdom_path=_wisdom(tmp_path, "b.json"),
+                           config=cfg)
+        assert k1 == k2
+
+    def test_default_knobs_are_candidate_zero(self, tmp_path):
+        cfg = tuner.TuneConfig(measurer="analytic")
+        _, rep = tuner.tune(**KW, wisdom_path=_wisdom(tmp_path),
+                            config=cfg)
+        assert rep.candidates[0]["knobs"] == {
+            "overlap": "off", "layout": "zero_copy", "batch_tile": None}
+
+
+class TestWisdomRoundTrip:
+    def test_hit_is_pure_lookup(self, tmp_path):
+        wp = _wisdom(tmp_path)
+        cfg = tuner.TuneConfig(measurer=_fake_measurer())
+        k1, r1 = tuner.tune(**KW, wisdom_path=wp, config=cfg)
+        assert r1.measurements > 0
+        k2, r2 = tuner.tune(**KW, wisdom_path=wp, config=cfg)
+        assert r2.wisdom_hit and r2.measurements == 0
+        assert k2 == k1
+        stats = tuner.tune_stats()
+        assert stats["wisdom_hits"] == 1 and stats["tuned"] == 2
+
+    def test_file_survives_reload(self, tmp_path):
+        wp = _wisdom(tmp_path)
+        cfg = tuner.TuneConfig(measurer="analytic")
+        k1, r1 = tuner.tune(**KW, wisdom_path=wp, config=cfg)
+        doc = json.loads((tmp_path / "wisdom.json").read_text())
+        assert doc["version"] == tuner.WISDOM_VERSION
+        assert r1.key in doc["entries"]
+        assert doc["entries"][r1.key]["knobs"] == k1
+        # a FRESH store object (new process analogue) hits
+        store = tuner.WisdomStore(wp)
+        assert store.lookup(r1.key)["knobs"] == k1
+
+    def test_wisdom_hit_counts_cache_miss_not_hit(self, tmp_path):
+        """The §14 bugfix: a wisdom hit that still builds a NEW
+        ExecutablePlan is a plan-cache MISS plus a wisdom hit — only a
+        plan reused from the cache is a cache hit."""
+        wp = _wisdom(tmp_path)
+        cfg = tuner.TuneConfig(measurer="analytic")
+        fft_api.plan(**KW, tune=True, wisdom_path=wp, tune_config=cfg)
+        base = fft_api.cache_info()
+        assert base["wisdom_hits"] == 0  # first plan measured, no hit
+        fft_api.clear_plan_cache()       # wisdom outlives the plan cache
+        fft_api.plan(**KW, tune=True, wisdom_path=wp, tune_config=cfg)
+        info = fft_api.cache_info()
+        assert info["wisdom_hits"] == 1
+        assert info["hits"] == 0         # new build: NOT a cache hit
+        assert info["misses"] >= 1
+        # same call again: plan cache hit AND wisdom hit
+        fft_api.plan(**KW, tune=True, wisdom_path=wp, tune_config=cfg)
+        info = fft_api.cache_info()
+        assert info["wisdom_hits"] == 2 and info["hits"] == 1
+
+
+class TestWisdomCorruption:
+    @pytest.mark.parametrize("payload", [
+        "{not json",                       # truncated/garbage
+        '{"version": 99, "entries": {}}',  # wrong version
+        '{"version": 1, "entries": 3}',    # wrong entries type
+        '["list", "not", "object"]',       # wrong document type
+    ])
+    def test_corrupt_wisdom_degrades_with_event(self, tmp_path, payload):
+        wp = tmp_path / "wisdom.json"
+        wp.write_text(payload)
+        store = tuner.WisdomStore(str(wp))  # must not raise
+        assert len(store) == 0
+        evs = events.events("wisdom_corrupt")
+        assert evs and evs[-1]["path"] == str(wp)
+        # tuning through the corrupt file measures and then REPAIRS it
+        cfg = tuner.TuneConfig(measurer="analytic")
+        _, rep = tuner.tune(**KW, wisdom_path=str(wp), config=cfg)
+        assert not rep.wisdom_hit and rep.measurements > 0
+        doc = json.loads(wp.read_text())
+        assert doc["version"] == tuner.WISDOM_VERSION
+
+    def test_stale_invalid_knobs_remeasure(self, tmp_path):
+        wp = _wisdom(tmp_path)
+        cfg = tuner.TuneConfig(measurer="analytic")
+        _, rep = tuner.tune(**KW, wisdom_path=wp, config=cfg)
+        # poison the stored knobs with an impossible overlap
+        store = tuner.WisdomStore.get(wp)
+        entry = store.lookup(rep.key)
+        entry["knobs"] = {"overlap": 3, "layout": "nope",
+                          "batch_tile": -1}
+        store.record(rep.key, entry)
+        _, rep2 = tuner.tune(**KW, wisdom_path=wp, config=cfg)
+        assert not rep2.wisdom_hit and rep2.measurements > 0
+        assert events.events("wisdom_stale")
+
+
+class TestMeshFingerprint:
+    def test_different_mesh_shape_remeasures(self, tmp_path):
+        if jax.device_count() < 4:
+            pytest.skip("needs >= 4 devices")
+        wp = _wisdom(tmp_path)
+        cfg = tuner.TuneConfig(measurer="analytic")
+        mesh_a = compat.make_mesh((4,), ("data",))
+        kw = dict(kind="c2c", shape=(64, 256), mesh=mesh_a,
+                  axes=("data",), num_devices=4,
+                  placement="distributed")
+        _, r1 = tuner.tune(**kw, wisdom_path=wp, config=cfg)
+        assert r1.measurements > 0
+        # same spec, HALF the devices: fingerprint differs, no hit
+        mesh_b = compat.make_mesh((2,), ("data",))
+        kw_b = dict(kw, mesh=mesh_b, num_devices=2)
+        _, r2 = tuner.tune(**kw_b, wisdom_path=wp, config=cfg)
+        assert not r2.wisdom_hit and r2.measurements > 0
+        assert r1.key != r2.key
+        assert tuner.mesh_fingerprint(mesh_a) != \
+            tuner.mesh_fingerprint(mesh_b)
+
+    def test_fingerprint_stable_for_same_mesh(self):
+        if jax.device_count() < 2:
+            pytest.skip("needs >= 2 devices")
+        m1 = compat.make_mesh((2,), ("data",))
+        m2 = compat.make_mesh((2,), ("data",))
+        assert tuner.mesh_fingerprint(m1) == tuner.mesh_fingerprint(m2)
+        assert tuner.mesh_fingerprint(None) == "mesh=none"
+
+
+class TestDegradation:
+    def test_unresolvable_spec_degrades(self, tmp_path):
+        cfg = tuner.TuneConfig(measurer="analytic")
+        knobs, rep = tuner.tune(kind="c2c", shape=(96,),  # not pow2
+                                wisdom_path=_wisdom(tmp_path), config=cfg)
+        assert knobs == {} and rep.degraded
+        assert events.events("tune_degraded")
+        # and plan() itself still raises the REAL error
+        with pytest.raises(ValueError, match="power of two"):
+            fft_api.plan(kind="c2c", shape=(96,), tune=True,
+                         wisdom_path=_wisdom(tmp_path), tune_config=cfg)
+
+
+class TestOutOfCoreTuning:
+    def test_round_trip_and_determinism(self, tmp_path):
+        wp = _wisdom(tmp_path)
+        s1, r1 = tuner.tune_out_of_core(1 << 24, 1 << 22, wisdom_path=wp)
+        assert not r1.wisdom_hit and r1.measurements >= 1
+        assert s1 in tuner.OOC_PANEL_SCALES
+        s2, r2 = tuner.tune_out_of_core(1 << 24, 1 << 22, wisdom_path=wp)
+        assert r2.wisdom_hit and r2.measurements == 0 and s2 == s1
+        # fresh store, same model: same winner
+        s3, _ = tuner.tune_out_of_core(
+            1 << 24, 1 << 22, wisdom_path=_wisdom(tmp_path, "b.json"))
+        assert s3 == s1
+
+    def test_measurer_override_flips_winner(self, tmp_path):
+        # a measurer that rewards SMALL panels (more jobs) inverts the
+        # disk model's preference and must win + log the disagreement
+        def like_small(factors, cfg):
+            return 1.0 / (factors.pass1_jobs + factors.pass2_jobs)
+        cfg = tuner.TuneConfig(measurer=like_small)
+        s, rep = tuner.tune_out_of_core(
+            1 << 24, 1 << 22, wisdom_path=_wisdom(tmp_path), config=cfg)
+        assert s == max(c["knobs"]["panel_scale"] for c in rep.candidates)
+        if len(rep.candidates) > 1:
+            assert rep.disagreement
+            assert events.events("tune_disagreement")
+
+
+class TestServiceWarmup:
+    def test_first_request_zero_plan_misses(self):
+        from repro.serve.fft_service import FftService
+        svc = FftService(coalesce=4)
+        summary = svc.warmup([
+            {"kind": "c2c", "shape": (64,), "rows": 2},
+            ("r2c", (64,), 2),
+        ])
+        assert summary["specs"] == 2
+        before = fft_api.cache_info()["misses"]
+        with svc:
+            t1 = svc.submit("c2c", np.ones((2, 64), np.float32),
+                            np.zeros((2, 64), np.float32))
+            t2 = svc.submit("r2c", np.ones((2, 64), np.float32))
+            t1.result(timeout=60)
+            t2.result(timeout=60)
+        assert fft_api.cache_info()["misses"] == before
+        want = np.fft.fft(np.ones((2, 64)))
+        got_r, got_i = t1.result()
+        np.testing.assert_allclose(np.asarray(got_r), want.real,
+                                   atol=1e-3)
+
+    def test_warmup_with_abft_covers_checksum_row(self):
+        from repro.serve.fft_service import FftService
+        svc = FftService(coalesce=2, verify="abft", impl="ref")
+        svc.warmup([{"kind": "c2c", "shape": (64,), "rows": 2}])
+        before = fft_api.cache_info()["misses"]
+        with svc:
+            t = svc.submit("c2c", np.ones((2, 64), np.float32),
+                           np.zeros((2, 64), np.float32))
+            t.result(timeout=60)
+        assert fft_api.cache_info()["misses"] == before

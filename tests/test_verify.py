@@ -262,17 +262,19 @@ def test_maponly_serial_verify_fn_catches_post_map_corruption(tmp_path, rng):
     from repro.launch.fft_job import parseval_verify_fn, serial_map_fn
 
     store = _store(tmp_path, rng)
+    runs = iter(range(10))  # unique per-run dirs (id() reuses addresses)
 
     def run(injector, verify_fn):
+        i = next(runs)
         cfg = JobConfig(workers=2, max_retries=4, injector=injector,
                         verify_fn=verify_fn)
         store.injector = injector
-        job = MapOnlyJob(store, tmp_path / f"out{id(cfg)}",
+        job = MapOnlyJob(store, tmp_path / f"out{i}",
                          serial_map_fn(FFT_LEN, "ref",
                                        lambda s, t0: t0), cfg)
         stats = job.run()
-        job.merge(tmp_path / f"m{id(cfg)}.bin")
-        return stats, (tmp_path / f"m{id(cfg)}.bin").read_bytes()
+        job.merge(tmp_path / f"m{i}.bin")
+        return stats, (tmp_path / f"m{i}.bin").read_bytes()
 
     _, clean = run(None, None)
     storm = FaultPlan((FaultRule("maponly.attempt", 0, kind="corrupt"),))
